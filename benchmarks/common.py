@@ -1,0 +1,21 @@
+"""Shared benchmark helpers."""
+import time
+
+import jax
+
+
+def time_call(fn, *args, warmup=2, iters=5):
+    """Median wall time of fn(*args) in seconds (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name, us_per_call, derived):
+    print(f"{name},{us_per_call:.1f},{derived}")

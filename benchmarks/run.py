@@ -1,0 +1,35 @@
+"""Benchmark harness: one module per paper table/figure + the roofline.
+
+Prints ``name,us_per_call,derived`` CSV (one row per measurement).
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (table3_large_matrices, fig3_suitesparse,
+                            table5_scaling, table4_resources, roofline,
+                            serpens_kernel)
+    print("name,us_per_call,derived")
+    suites = [
+        ("table3", table3_large_matrices.run),
+        ("fig3", fig3_suitesparse.run),
+        ("table5", table5_scaling.run),
+        ("table4", table4_resources.run),
+        ("serpens_kernel", serpens_kernel.run),
+        ("roofline", roofline.run),
+    ]
+    failures = 0
+    for name, fn in suites:
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            print(f"{name},0.0,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

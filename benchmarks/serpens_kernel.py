@@ -1,0 +1,47 @@
+"""Serpens kernel micro-benchmark: stream-execution throughput on CPU
+(XLA path) across matrix structures, plus the format-preprocessing cost.
+
+On this CPU-only container the wall numbers are *not* TPU projections (the
+analytic model in table3/table5 covers that); this suite tracks the
+engine's relative behaviour: structure sensitivity (banded vs power-law),
+padding overhead, and preprocessing throughput.
+"""
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import time_call, emit
+from repro.core import format as F
+from repro.core.spmv import SerpensSpMV
+from repro.data import matrices as M
+
+CFG = F.SerpensConfig(segment_width=8192, lanes=128, sublanes=8)
+
+
+def run(nnz=400_000):
+    n = 50_000
+    cases = {
+        "uniform": M.uniform_random(n, n, nnz, seed=0),
+        "powerlaw": M.power_law_graph(n, nnz, seed=0),
+        "banded": M.banded(n, max(1, nnz // (2 * n)), seed=0),
+    }
+    for name, (rows, cols, vals) in cases.items():
+        for label, cfg in (("paper", CFG), ("opt", F.OPTIMIZED_CONFIG)):
+            t0 = time.perf_counter()
+            op = SerpensSpMV(rows, cols, vals, (n, n), cfg, backend="xla")
+            t_pre = time.perf_counter() - t0
+            x = np.random.default_rng(0).normal(size=n).astype(np.float32)
+            t = time_call(lambda v: op.matvec(v, backend="xla"),
+                          jnp.asarray(x), warmup=1, iters=3)
+            emit(f"serpens_kernel/{name}_{label}", t * 1e6,
+                 f"cpu_mteps={op.nnz / t / 1e6:.0f}"
+                 f"|pad={op.padding_ratio:.3f}"
+                 f"|aux={op.host.n_aux / max(op.nnz, 1):.3f}"
+                 f"|preprocess_s={t_pre:.2f}"
+                 f"|prep_mnnz_per_s={op.nnz / t_pre / 1e6:.1f}")
+    return True
+
+
+if __name__ == "__main__":
+    run()

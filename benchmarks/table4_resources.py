@@ -1,0 +1,49 @@
+"""Paper Table 4 analog: on-chip resource accounting.
+
+FPGA LUT/FF/DSP have no TPU analogue; the portable claim in Table 4 is the
+*on-chip memory* story: Serpens needs fewer resources than Sextans because
+SpMV needs no dense-matrix sharing.  The TPU analog is the per-core VMEM
+working set of the Pallas kernel:
+
+  x-segment (W fp32) + accumulator (rows_padded fp32) + double-buffered
+  chunk (idx+val) — vs a Sextans-style SpMM kernel that must also stage
+  dense B/C tiles (N columns wide).
+
+Also reproduces the paper's Eq. 1-3 FPGA numbers exactly.
+"""
+from benchmarks.common import emit
+from repro.core import scheduler as S
+
+
+def vmem_spmv(w=8192, rows=1 << 20, tiles_per_chunk=1):
+    x_seg = 4 * w
+    acc = 4 * rows
+    chunk = 2 * (8 * 1024 * tiles_per_chunk)     # double-buffered idx+val
+    return x_seg + acc + chunk
+
+
+def vmem_spmm(w=8192, rows=1 << 20, n=8, tiles_per_chunk=1):
+    x_seg = 4 * w * n                            # dense B tile
+    acc = 4 * rows * n                           # dense C accumulator
+    chunk = 2 * (8 * 1024 * tiles_per_chunk)
+    return x_seg + acc + chunk
+
+
+def run():
+    spec = S.SERPENS_V16
+    emit("table4/fpga_brams_eq1", 0.0,
+         f"{S.fpga_brams(spec)}_BRAM18K_pairs(paper=512@H_A=16)")
+    emit("table4/fpga_urams_eq2", 0.0,
+         f"{S.fpga_urams(spec, 3)}(paper_table4=384)")
+    emit("table4/fpga_row_depth_eq3", 0.0,
+         f"{S.fpga_row_depth(spec, 3, 4096)}(supports_8.4M_rows)")
+    sv = vmem_spmv()
+    sm = vmem_spmm()
+    emit("table4/tpu_vmem_spmv_bytes", 0.0, f"{sv}")
+    emit("table4/tpu_vmem_spmm_n8_bytes", 0.0,
+         f"{sm}|spmv_saves={1 - sv / sm:.1%}")
+    return sv
+
+
+if __name__ == "__main__":
+    run()

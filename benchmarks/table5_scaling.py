@@ -1,0 +1,50 @@
+"""Paper Table 5 / Sec. 4.4: scaling up memory channels.
+
+FPGA: Eq. 4 with H_A = 16 → 24 at 270 MHz (the paper's Serpens-v24).
+TPU analog: the 'channel' is a chip — the row-partitioned distributed SpMV
+(core/distributed.py) scales the A-stream bandwidth linearly while x is
+replicated, exactly the paper's channel-allocation argument.  We model 1-8
+chips and report the modeled speedups.
+"""
+import math
+
+from benchmarks.common import emit
+from repro.core import scheduler as S
+
+
+def run():
+    ratios = []
+    for gid, (name, v, nnz, _ms, mteps16, _gl, mteps24_paper) in \
+            S.PAPER_TABLE3.items():
+        t16 = S.fpga_time_s(v, v, nnz, S.SERPENS_V16)
+        t24 = S.fpga_time_s(v, v, nnz, S.SERPENS_V24)
+        m24 = S.mteps(nnz, t24)
+        ratio = m24 / mteps24_paper
+        ratios.append(ratio)
+        emit(f"table5/{gid}", 0.0,
+             f"v24_model={m24:.0f}|v24_paper={mteps24_paper}"
+             f"|model_speedup={t16 / t24:.2f}x")
+    gm = lambda xs: math.exp(sum(math.log(x) for x in xs) / len(xs))
+    emit("table5/geomean_model_vs_paper", 0.0, f"ratio={gm(ratios):.2f}")
+
+    # TPU chip scaling (row partition: A-bandwidth scales, x replicated)
+    v, nnz = 1_000_000, 100_000_000
+    slots = int(nnz * 1.1)
+    base = None
+    for chips in (1, 2, 4, 8):
+        # each chip streams slots/chips; x is re-streamed per chip (row
+        # partition keeps accumulators disjoint — paper Sec. 3.3)
+        stream = (8 * slots / chips + 4 * v + 8 * v / chips) / S.TPU_V5E.hbm_bw
+        tiles = slots / chips / 1024
+        gather = tiles * S.TPU_V5E.cycles_per_tile_baseline / \
+            S.TPU_V5E.vpu_freq_hz
+        t = max(stream, gather)
+        if base is None:
+            base = t
+        emit(f"table5/tpu_chips_{chips}", 0.0,
+             f"mteps={S.mteps(nnz, t):.0f}|speedup={base / t:.2f}x")
+    return gm(ratios)
+
+
+if __name__ == "__main__":
+    run()

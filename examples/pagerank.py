@@ -1,0 +1,46 @@
+"""PageRank by iterated SpMV — the paper's graph-analytics use case.
+
+    PYTHONPATH=src python examples/pagerank.py
+
+r ← d·A_norm·r + (1-d)/n, run to convergence on a synthetic power-law
+graph (stand-in for the paper's SNAP/OGB graphs).
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import format as F
+from repro.core.spmv import SerpensSpMV
+from repro.data import matrices as M
+
+
+def main():
+    n, nnz = 50_000, 500_000
+    rows, cols, vals = M.power_law_graph(n, nnz, seed=42)
+    # Column-normalize: A_norm[i,j] = |A[i,j]| / deg_out(j)
+    colsum = np.zeros(n)
+    np.add.at(colsum, cols, np.abs(vals))
+    vals_n = (np.abs(vals) / np.maximum(colsum[cols], 1e-12)
+              ).astype(np.float32)
+    op = SerpensSpMV(rows, cols, vals_n, (n, n),
+                     F.SerpensConfig(segment_width=8192, lanes=128))
+    print(f"graph: {n:,} vertices, {op.nnz:,} edges, "
+          f"padding={op.padding_ratio:.1%}")
+
+    d = 0.85
+    r = jnp.full((n,), 1.0 / n)
+    for it in range(100):
+        link = op(r, alpha=d)
+        # teleport + dangling-node mass: keeps r a probability vector
+        r_new = link + (1.0 - float(link.sum())) / n
+        delta = float(jnp.abs(r_new - r).sum())
+        r = r_new
+        if it % 10 == 0:
+            print(f"  iter {it:3d}  L1 delta {delta:.3e}")
+        if delta < 1e-9:
+            break
+    top = np.argsort(-np.asarray(r))[:5]
+    print(f"converged after {it} iterations; top vertices: {top.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

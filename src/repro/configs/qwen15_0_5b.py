@@ -1,0 +1,18 @@
+"""qwen1.5-0.5b [dense] — 24L d=1024 16H (kv=16) d_ff=2816 vocab=151936,
+QKV bias.  [hf:Qwen/Qwen1.5-0.5B; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="qwen1.5-0.5b",
+    family="dense",
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=2816,
+    vocab_size=151_936,
+    qkv_bias=True,
+    tie_embeddings=True,
+)

@@ -1,0 +1,387 @@
+"""Serpens sparse-matrix preprocessing — the paper's accelerator-efficient format.
+
+The paper (Sec. 3.2-3.4) preprocesses a COO matrix into a stream of fixed-width
+channel words so that *all* off-chip access is sequential and *all* random access
+(x-gather, y-accumulate) is confined to on-chip memory:
+
+  1. **Segment partition**: columns are split into segments of ``W`` (paper:
+     W = 8192); the x-segment is staged on chip while its non-zeros stream past.
+  2. **PE row interleave**: row ``r`` belongs to PE ``r mod NUM_PE`` so
+     accumulator banks are disjoint.  TPU adaptation: *lane-stationary rows* —
+     row ``r`` is owned by VPU lane ``r mod LANES`` and its on-chip accumulator
+     address is ``r // LANES``.
+  3. **Index coalescing**: indices are segment-/lane-local, so a (row, col)
+     pair packs into one 32-bit word → 8 B per non-zero (fp32 value + index),
+     exactly the paper's 64-bit channel element.
+  4. **Non-zero reordering ("coloring")**: the accumulator has a ``T``-slot
+     read-after-write hazard window.  Within each lane, non-zeros are reordered
+     so no two elements with the same destination row appear within ``T``
+     consecutive slots; null elements (sentinel index) pad the gaps.  This is
+     the paper's Fig. 2 (d) generalized to the (SUBLANES, LANES) VPU tile.
+
+The output is a :class:`SerpensMatrix`: three dense arrays shaped for Pallas
+``BlockSpec`` streaming — ``idx[T, 8, 128]`` (int32, packed), ``val[T, 8, 128]``
+(fp32) and ``seg_ids[T]`` (int32 scalar-prefetch: which x-segment each tile
+needs).  Tiles are sorted by segment so each x-segment is DMA'd into VMEM once.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import numpy as np
+
+SENTINEL = np.int32(-1)  # null element (paper: padded null non-zeros)
+ROW_BITS = 16
+COL_MASK = (1 << ROW_BITS) - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class SerpensConfig:
+    """Geometry of the Serpens stream.
+
+    Attributes:
+      segment_width: W — columns per x segment (paper default 8192). Must be
+        ≤ 65536 so a column offset fits in 16 bits.
+      lanes: number of accumulator banks (FPGA: #PEs; TPU: VPU lanes). Row
+        ``r`` is owned by lane ``r % lanes``.
+      sublanes: slots per lane per tile (TPU: VPU sublanes = 8).
+      raw_window: T — no duplicate destination row within any T consecutive
+        slots of one lane (paper: T = DSP accumulate latency = 2; the TPU
+        tile-conflict-freedom requirement is T = sublanes).
+      tiles_per_chunk: how many (sublanes × lanes) tiles form one grid step of
+        the kernel (larger ⇒ fewer grid steps, more per-segment padding).
+    """
+
+    segment_width: int = 8192
+    lanes: int = 128
+    sublanes: int = 8
+    raw_window: int = 8
+    tiles_per_chunk: int = 1
+    # Beyond-paper (§Perf C3): cap any row's entries per (segment, lane) at
+    # ~n_lane/raw_window and divert the excess to a small auxiliary COO
+    # that the epilogue scatter-adds.  Kills the hot-row padding blowup on
+    # power-law graphs (the paper's own G1/G7 weak spot).
+    spill_hot_rows: bool = False
+    # Beyond-paper (§Perf C4): additionally cap each lane's depth at
+    # ``lane_balance`` × the segment's mean lane depth, spilling overflow —
+    # bounds padding from cross-lane imbalance.  0 disables.
+    lane_balance: float = 0.0
+
+    def __post_init__(self):
+        if not (0 < self.segment_width <= 1 << 16):
+            raise ValueError("segment_width must be in (0, 65536]")
+        if self.raw_window < 1:
+            raise ValueError("raw_window must be >= 1")
+        if self.tiles_per_chunk < 1:
+            raise ValueError("tiles_per_chunk must be >= 1")
+
+
+# Paper-faithful geometry (Sec. 3.2-3.4): W=8192, RAW window = one tile.
+PAPER_CONFIG = SerpensConfig()
+# Beyond-paper preset (§Perf C1-C4): relaxed RAW window (TPU scatter has no
+# 8-deep hazard), hot-row spill, lane-depth balancing at 1.1× mean.
+OPTIMIZED_CONFIG = SerpensConfig(raw_window=2, spill_hot_rows=True,
+                                 lane_balance=1.1)
+
+
+@dataclasses.dataclass
+class SerpensMatrix:
+    """A sparse matrix in the Serpens stream format (host-side container)."""
+
+    shape: tuple[int, int]  # (M, K)
+    nnz: int
+    config: SerpensConfig
+    # Stream arrays (numpy on host; moved to device by kernels/ops.py):
+    idx: np.ndarray  # int32 [num_tiles, sublanes, lanes]: (row_local<<16)|col_local
+    val: np.ndarray  # float32 [num_tiles, sublanes, lanes]
+    seg_ids: np.ndarray  # int32 [num_tiles] — x segment id per tile (ascending)
+    num_segments: int
+    # Hot-row spill side-stream (empty unless config.spill_hot_rows):
+    aux_rows: np.ndarray = None  # int32 [n_aux]
+    aux_cols: np.ndarray = None  # int32 [n_aux]
+    aux_vals: np.ndarray = None  # float32 [n_aux]
+
+    @property
+    def num_tiles(self) -> int:
+        return self.idx.shape[0]
+
+    @property
+    def padded_rows(self) -> int:
+        m = self.shape[0]
+        return -(-m // self.config.lanes) * self.config.lanes
+
+    @property
+    def padded_cols(self) -> int:
+        return self.num_segments * self.config.segment_width
+
+    @property
+    def n_aux(self) -> int:
+        return 0 if self.aux_rows is None else int(self.aux_rows.size)
+
+    @property
+    def stream_bytes(self) -> int:
+        """Off-chip bytes for one pass over A: 8 B per stream slot (incl.
+        padding) + 12 B per spilled aux entry (COO row/col/val)."""
+        return int(self.idx.size) * 8 + 12 * self.n_aux
+
+    @property
+    def padding_ratio(self) -> float:
+        """Fraction of stream slots that are null padding."""
+        total = self.idx.size
+        kept = self.nnz - self.n_aux
+        return float(total - kept) / max(total, 1)
+
+
+def _schedule_lane(rows, cols, vals, window):
+    """Reorder one lane's non-zeros so no row repeats within ``window`` slots.
+
+    Greedy most-frequent-first with cooldown (the classic task-scheduler
+    algorithm that the paper's 'coloring + reordering' reduces to for a single
+    lane).  ``rows`` are lane-local (already divided by LANES).  Returns
+    parallel lists (slot_rows, slot_cols, slot_vals); padded slots hold
+    (SENTINEL, 0, 0.0).
+    """
+    n = len(rows)
+    if n == 0:
+        return [], [], []
+    # Fast path: every destination row distinct ⇒ any order is hazard-free.
+    if len(np.unique(rows)) == n:
+        return list(rows), list(cols), list(vals)
+    order = np.argsort(rows, kind="stable")
+    rows_s, cols_s, vals_s = rows[order], cols[order], vals[order]
+    uniq, starts = np.unique(rows_s, return_index=True)
+    bounds = list(starts) + [n]
+    buckets = {}
+    for i, r in enumerate(uniq):
+        lo, hi = bounds[i], bounds[i + 1]
+        buckets[int(r)] = [(float(vals_s[j]), int(cols_s[j]))
+                           for j in range(lo, hi)]
+
+    heap = [(-len(v), r) for r, v in buckets.items()]
+    heapq.heapify(heap)
+    cooldown: list[tuple[int, int, int]] = []  # (ready_slot, -remaining, row)
+    out_rows: list[int] = []
+    out_cols: list[int] = []
+    out_vals: list[float] = []
+    t = 0
+    while heap or cooldown:
+        while cooldown and cooldown[0][0] <= t:
+            _, negrem, r = heapq.heappop(cooldown)
+            heapq.heappush(heap, (negrem, r))
+        if heap:
+            negrem, r = heapq.heappop(heap)
+            v, c = buckets[r].pop(0)
+            out_rows.append(r)
+            out_cols.append(c)
+            out_vals.append(v)
+            if -negrem > 1:
+                heapq.heappush(cooldown, (t + window, negrem + 1, r))
+        else:
+            out_rows.append(int(SENTINEL))
+            out_cols.append(0)
+            out_vals.append(0.0)
+        t += 1
+    return out_rows, out_cols, out_vals
+
+
+def encode(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    vals: np.ndarray,
+    shape: tuple[int, int],
+    config: SerpensConfig = SerpensConfig(),
+) -> SerpensMatrix:
+    """Convert a COO matrix into the Serpens stream format.
+
+    Duplicate (row, col) entries are allowed and are summed (standard COO
+    semantics); they stay separate stream elements, kept ``raw_window`` slots
+    apart by the coloring pass.
+    """
+    m, k = shape
+    rows = np.asarray(rows, dtype=np.int64)
+    cols = np.asarray(cols, dtype=np.int64)
+    vals = np.asarray(vals, dtype=np.float32)
+    if rows.shape != cols.shape or rows.shape != vals.shape:
+        raise ValueError("rows/cols/vals must have identical shapes")
+    if rows.size and (rows.min() < 0 or rows.max() >= m):
+        raise ValueError("row index out of range")
+    if cols.size and (cols.min() < 0 or cols.max() >= k):
+        raise ValueError("col index out of range")
+    cfg = config
+    # Lane-local row index must fit in ROW_BITS bits; 0xFFFF is reserved so a
+    # real element can never alias the SENTINEL packed word.
+    row_cap = (1 << ROW_BITS) - 1
+    if -(-m // cfg.lanes) > row_cap:
+        raise ValueError(
+            f"M={m} exceeds Serpens row capacity {cfg.lanes * row_cap} "
+            f"(lane-local row index must fit in {ROW_BITS} bits)")
+
+    w = cfg.segment_width
+    num_segments = max(1, -(-k // w))
+    slots_per_lane_chunk = cfg.sublanes * cfg.tiles_per_chunk
+
+    seg_of = cols // w
+    lane_of = rows % cfg.lanes
+
+    tile_idx_parts: list[np.ndarray] = []
+    tile_val_parts: list[np.ndarray] = []
+    seg_id_parts: list[int] = []
+
+    # Pre-sort once by segment for cheap per-segment slicing.
+    seg_order = np.argsort(seg_of, kind="stable")
+    seg_sorted = seg_of[seg_order]
+    seg_bounds = np.searchsorted(seg_sorted, np.arange(num_segments + 1))
+
+    aux_r: list[np.ndarray] = []
+    aux_c: list[np.ndarray] = []
+    aux_v: list[np.ndarray] = []
+
+    for s in range(num_segments):
+        lo, hi = seg_bounds[s], seg_bounds[s + 1]
+        if lo == hi:
+            continue
+        sel = seg_order[lo:hi]
+        r_s, v_s, l_s = rows[sel], vals[sel], lane_of[sel]
+        c_local = cols[sel] - s * w  # segment-local column (index coalescing)
+        # Per-lane scheduling (coloring + reordering).
+        lane_sched: list[tuple[list, list, list]] = []
+        depth = 0
+        lane_sort = np.argsort(l_s, kind="stable")
+        l_sorted = l_s[lane_sort]
+        lane_bounds = np.searchsorted(l_sorted, np.arange(cfg.lanes + 1))
+        mean_depth = max(1, (hi - lo) // cfg.lanes)
+        lane_cap = (int(np.ceil(cfg.lane_balance * mean_depth))
+                    if cfg.lane_balance else None)
+        for lane in range(cfg.lanes):
+            llo, lhi = lane_bounds[lane], lane_bounds[lane + 1]
+            pick = lane_sort[llo:lhi]
+            if lane_cap is not None and len(pick) > lane_cap:
+                spill = pick[lane_cap:]
+                aux_r.append(r_s[spill].astype(np.int32))
+                aux_c.append((c_local[spill] + s * w).astype(np.int32))
+                aux_v.append(v_s[spill])
+                pick = pick[:lane_cap]
+            if cfg.spill_hot_rows and len(pick):
+                # Cap per-row occupancy at ~n/window so the schedule length
+                # stays ≈ n; divert the excess to the aux COO side-stream.
+                lane_rows = r_s[pick]
+                cap = max(1, len(pick) // cfg.raw_window)
+                order_in = np.argsort(lane_rows, kind="stable")
+                rr = lane_rows[order_in]
+                occ = np.arange(len(rr)) - np.searchsorted(rr, rr,
+                                                           side="left")
+                keep_sorted = occ < cap
+                keep = np.empty(len(pick), bool)
+                keep[order_in] = keep_sorted
+                if not keep.all():
+                    spill = pick[~keep]
+                    aux_r.append(r_s[spill].astype(np.int32))
+                    aux_c.append((c_local[spill] + s * w).astype(np.int32))
+                    aux_v.append(v_s[spill])
+                    pick = pick[keep]
+            sched = _schedule_lane(
+                (r_s[pick] // cfg.lanes).astype(np.int64),
+                c_local[pick], v_s[pick], cfg.raw_window)
+            lane_sched.append(sched)
+            depth = max(depth, len(sched[0]))
+        # Pad every lane to the chunk-aligned common depth.
+        depth = max(slots_per_lane_chunk,
+                    -(-depth // slots_per_lane_chunk) * slots_per_lane_chunk)
+        idx_mat = np.full((depth, cfg.lanes), SENTINEL, dtype=np.int32)
+        val_mat = np.zeros((depth, cfg.lanes), dtype=np.float32)
+        for lane in range(cfg.lanes):
+            lr, lc, lv = lane_sched[lane]
+            if not lr:
+                continue
+            lr_arr = np.asarray(lr, dtype=np.int64)
+            lc_arr = np.asarray(lc, dtype=np.int64)
+            live = lr_arr != SENTINEL
+            packed = np.where(live, (lr_arr << ROW_BITS) | lc_arr,
+                              np.int64(-1))
+            idx_mat[: len(lr), lane] = packed.astype(np.int32)
+            val_mat[: len(lr), lane] = np.asarray(lv, dtype=np.float32)
+        tile_idx_parts.append(idx_mat.reshape(-1, cfg.sublanes, cfg.lanes))
+        tile_val_parts.append(val_mat.reshape(-1, cfg.sublanes, cfg.lanes))
+        seg_id_parts.extend([s] * (depth // cfg.sublanes))
+
+    if tile_idx_parts:
+        idx = np.concatenate(tile_idx_parts, axis=0)
+        val = np.concatenate(tile_val_parts, axis=0)
+        seg_ids = np.asarray(seg_id_parts, dtype=np.int32)
+    else:  # all-zero matrix: one null chunk keeps shapes static
+        idx = np.full((cfg.tiles_per_chunk, cfg.sublanes, cfg.lanes), SENTINEL,
+                      dtype=np.int32)
+        val = np.zeros(idx.shape, dtype=np.float32)
+        seg_ids = np.zeros((cfg.tiles_per_chunk,), dtype=np.int32)
+
+    # Chunk alignment: the kernel grid steps over whole chunks.
+    rem = idx.shape[0] % cfg.tiles_per_chunk
+    if rem:
+        pad = cfg.tiles_per_chunk - rem
+        idx = np.concatenate(
+            [idx, np.full((pad,) + idx.shape[1:], SENTINEL, dtype=np.int32)])
+        val = np.concatenate([val, np.zeros((pad,) + val.shape[1:], np.float32)])
+        seg_ids = np.concatenate(
+            [seg_ids, np.full((pad,), seg_ids[-1], dtype=np.int32)])
+
+    empty_i = np.zeros((0,), np.int32)
+    return SerpensMatrix(
+        shape=(m, k), nnz=int(vals.size), config=cfg,
+        idx=idx, val=val, seg_ids=seg_ids, num_segments=num_segments,
+        aux_rows=np.concatenate(aux_r) if aux_r else empty_i,
+        aux_cols=np.concatenate(aux_c) if aux_c else empty_i,
+        aux_vals=(np.concatenate(aux_v).astype(np.float32) if aux_v
+                  else np.zeros((0,), np.float32)))
+
+
+def decode_to_coo(sm: SerpensMatrix):
+    """Inverse transform (for testing): recover COO triples from the stream."""
+    cfg = sm.config
+    idx = sm.idx.reshape(-1, cfg.lanes)
+    val = sm.val.reshape(-1, cfg.lanes)
+    # Each tile row inherits its tile's segment id.
+    seg = np.repeat(sm.seg_ids, cfg.sublanes)[:, None]
+    live = idx != SENTINEL
+    lanes = np.broadcast_to(np.arange(cfg.lanes)[None, :], idx.shape)
+    rows_local = (idx.astype(np.int64) >> ROW_BITS) & COL_MASK
+    cols_local = idx.astype(np.int64) & COL_MASK
+    rows = rows_local * cfg.lanes + lanes
+    cols = seg * cfg.segment_width + cols_local
+    out_r = rows[live].astype(np.int64)
+    out_c = cols[live].astype(np.int64)
+    out_v = val[live].astype(np.float32)
+    if sm.n_aux:
+        out_r = np.concatenate([out_r, sm.aux_rows.astype(np.int64)])
+        out_c = np.concatenate([out_c, sm.aux_cols.astype(np.int64)])
+        out_v = np.concatenate([out_v, sm.aux_vals])
+    return out_r, out_c, out_v
+
+
+def check_invariants(sm: SerpensMatrix) -> None:
+    """Assert the format invariants the hardware schedule relies on.
+
+    1. seg_ids ascending (each x segment staged once).
+    2. lane ownership: decoded row ≡ lane (mod LANES) — by construction.
+    3. RAW freedom: within each lane, no duplicate lane-local row inside any
+       window of ``raw_window`` consecutive slots *within a segment run*.
+    """
+    cfg = sm.config
+    if not np.all(np.diff(sm.seg_ids) >= 0):
+        raise AssertionError("seg_ids must be non-decreasing")
+    idx = sm.idx.reshape(-1, cfg.lanes).astype(np.int64)
+    seg = np.repeat(sm.seg_ids, cfg.sublanes)
+    rows_local = (idx >> ROW_BITS) & COL_MASK
+    live = idx != SENTINEL
+    t = cfg.raw_window
+    for lane in range(cfg.lanes):
+        col_live = live[:, lane]
+        col_rows = rows_local[:, lane]
+        for off in range(1, t):
+            a = slice(0, idx.shape[0] - off)
+            b = slice(off, idx.shape[0])
+            clash = (col_live[a] & col_live[b]
+                     & (col_rows[a] == col_rows[b]) & (seg[a] == seg[b]))
+            if np.any(clash):
+                raise AssertionError(
+                    f"RAW violation: lane {lane}, offset {off}")

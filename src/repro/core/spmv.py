@@ -1,0 +1,117 @@
+"""Public SpMV API: ``y = alpha * A @ x + beta * y`` with Serpens-formatted A.
+
+This is the paper's contract (Sec. 1) including the CompY (α, β) epilogue.
+``SerpensSpMV`` is the device-side operator: construct once from a COO matrix
+(preprocessing runs on host, exactly like the paper's offline format
+conversion), then apply to as many vectors as you like.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import format as sformat
+from repro.kernels import ops
+
+
+class SerpensSpMV:
+    """y = α·A·x + β·y for a fixed sparse A in Serpens stream format."""
+
+    def __init__(self, rows, cols, vals, shape,
+                 config: sformat.SerpensConfig = sformat.SerpensConfig(),
+                 backend: str = "auto"):
+        self.host = sformat.encode(rows, cols, vals, shape, config)
+        self.config = config
+        self.shape = tuple(shape)
+        self.backend = backend
+        (self.idx, self.val, self.seg_ids_tile,
+         self.seg_ids_chunk) = ops.device_arrays(self.host)
+        if self.host.n_aux:
+            self.aux = (jnp.asarray(self.host.aux_rows),
+                        jnp.asarray(self.host.aux_cols),
+                        jnp.asarray(self.host.aux_vals))
+        else:
+            self.aux = None
+
+    # -- properties -------------------------------------------------------
+    @property
+    def nnz(self) -> int:
+        return self.host.nnz
+
+    @property
+    def stream_bytes(self) -> int:
+        return self.host.stream_bytes
+
+    @property
+    def padding_ratio(self) -> float:
+        return self.host.padding_ratio
+
+    # -- compute ----------------------------------------------------------
+    def matvec(self, x, backend: str | None = None):
+        """Raw A @ x (no epilogue)."""
+        m, k = self.shape
+        xp = ops.pad_x(jnp.asarray(x), self.host.num_segments,
+                       self.config.segment_width)
+        acc = ops.run_spmv(
+            self.idx, self.val, self.seg_ids_tile, self.seg_ids_chunk, xp,
+            num_rows_padded=self.host.padded_rows,
+            segment_width=self.config.segment_width,
+            tiles_per_chunk=self.config.tiles_per_chunk,
+            backend=backend or self.backend)
+        if self.aux is not None:
+            ar, ac, av = self.aux   # hot-row spill epilogue (§Perf C3)
+            acc = acc.at[ar].add(av * xp[ac])
+        return acc[:m]
+
+    def __call__(self, x, alpha=1.0, beta=0.0, y=None, backend=None):
+        """The paper's full SpMV: y_out = α·A·x + β·y (CompY epilogue)."""
+        m, _ = self.shape
+        acc = self.matvec(x, backend=backend)
+        if y is None:
+            y = jnp.zeros((m,), jnp.float32)
+        return alpha * acc + beta * jnp.asarray(y, jnp.float32)
+
+    def matmat(self, x_mat, alpha=1.0, beta=0.0, y=None, backend=None):
+        """Multi-vector SpMM (Sextans-style baseline / batched serving)."""
+        from repro.kernels import serpens_spmv as sk
+        m, k = self.shape
+        kp = self.host.num_segments * self.config.segment_width
+        x_mat = jnp.asarray(x_mat, jnp.float32)
+        xp = jnp.pad(x_mat, ((0, kp - x_mat.shape[0]), (0, 0)))
+        backend = backend or self.backend
+        if backend == "pallas" or (backend == "auto"
+                                   and jax.default_backend() == "tpu"):
+            x3d = xp.reshape(self.host.num_segments,
+                             self.config.segment_width, -1)
+            acc = sk.spmm_pallas(
+                self.idx, self.val, self.seg_ids_chunk, x3d,
+                num_rows_padded=self.host.padded_rows,
+                segment_width=self.config.segment_width,
+                tiles_per_chunk=self.config.tiles_per_chunk,
+                interpret=jax.default_backend() != "tpu")
+        else:
+            acc = ops.spmm_stream_xla(
+                self.idx, self.val, self.seg_ids_tile, xp,
+                num_rows_padded=self.host.padded_rows,
+                segment_width=self.config.segment_width)
+        if self.aux is not None:
+            ar, ac, av = self.aux
+            acc = acc.at[ar].add(av[:, None] * xp[ac])
+        acc = acc[:m]
+        if y is None:
+            y = jnp.zeros_like(acc)
+        return alpha * acc + beta * jnp.asarray(y, jnp.float32)
+
+    def to_dense(self) -> np.ndarray:
+        """Densify (testing only)."""
+        r, c, v = sformat.decode_to_coo(self.host)
+        out = np.zeros(self.shape, np.float32)
+        np.add.at(out, (r, c), v)
+        return out
+
+
+def from_dense(a: np.ndarray, config=sformat.SerpensConfig(),
+               backend="auto") -> SerpensSpMV:
+    rows, cols = np.nonzero(a)
+    return SerpensSpMV(rows, cols, a[rows, cols], a.shape, config, backend)

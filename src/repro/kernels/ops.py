@@ -1,0 +1,94 @@
+"""Jit'd wrappers around the Serpens kernels + the XLA stream fallback.
+
+Three execution paths, selectable via ``backend=``:
+
+  * ``"pallas"``    — the TPU kernel (``serpens_spmv.py``); on CPU it runs in
+                      ``interpret=True`` mode (used by tests).
+  * ``"xla"``       — the same Serpens stream processed as one vectorized
+                      gather/scatter in plain XLA (fast on CPU; also the
+                      paper-faithful *algorithm* without the hand kernel —
+                      used as the §Perf baseline).
+  * ``"auto"``      — pallas on TPU, xla elsewhere.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.format import ROW_BITS, COL_MASK, SerpensMatrix
+from repro.kernels import serpens_spmv
+
+
+def _decode(idx, seg_ids_tile, segment_width, lanes):
+    """Decode the packed stream: global rows/cols + live mask."""
+    live = idx != -1
+    rows_local = jnp.where(live, (idx >> ROW_BITS) & COL_MASK, 0)
+    cols_local = jnp.where(live, idx & COL_MASK, 0)
+    lane = jax.lax.broadcasted_iota(jnp.int32, idx.shape, 2)
+    rows = rows_local * lanes + lane
+    cols = seg_ids_tile[:, None, None] * segment_width + cols_local
+    return live, rows, cols
+
+
+@functools.partial(jax.jit, static_argnames=("num_rows_padded",
+                                             "segment_width"))
+def spmv_stream_xla(idx, val, seg_ids_tile, x_flat, *, num_rows_padded,
+                    segment_width):
+    """Vectorized XLA execution of the Serpens stream (single scatter-add)."""
+    lanes = idx.shape[2]
+    live, rows, cols = _decode(idx, seg_ids_tile, segment_width, lanes)
+    xv = x_flat[cols.reshape(-1)].reshape(cols.shape)
+    contrib = jnp.where(live, val * xv, 0.0)
+    acc = jnp.zeros((num_rows_padded,), jnp.float32)
+    return acc.at[rows.reshape(-1)].add(contrib.reshape(-1))
+
+
+@functools.partial(jax.jit, static_argnames=("num_rows_padded",
+                                             "segment_width"))
+def spmm_stream_xla(idx, val, seg_ids_tile, x_mat, *, num_rows_padded,
+                    segment_width):
+    """Multi-vector stream execution: x_mat is (K_padded, N) → (R_padded, N)."""
+    lanes = idx.shape[2]
+    n = x_mat.shape[1]
+    live, rows, cols = _decode(idx, seg_ids_tile, segment_width, lanes)
+    xv = x_mat[cols.reshape(-1)]                       # (T*S*L, N)
+    contrib = (jnp.where(live, val, 0.0).reshape(-1)[:, None] * xv)
+    acc = jnp.zeros((num_rows_padded, n), jnp.float32)
+    return acc.at[rows.reshape(-1)].add(contrib)
+
+
+def device_arrays(sm: SerpensMatrix):
+    """Move a host SerpensMatrix's stream arrays to device (jnp)."""
+    cfg = sm.config
+    seg_chunks = sm.seg_ids[:: cfg.tiles_per_chunk]
+    return (jnp.asarray(sm.idx), jnp.asarray(sm.val),
+            jnp.asarray(sm.seg_ids), jnp.asarray(seg_chunks))
+
+
+def pad_x(x, num_segments, segment_width):
+    """Zero-pad a length-K vector to (num_segments * W,)."""
+    kp = num_segments * segment_width
+    return jnp.pad(x.astype(jnp.float32), (0, kp - x.shape[0]))
+
+
+def run_spmv(idx, val, seg_ids_tile, seg_ids_chunk, x, *, num_rows_padded,
+             segment_width, tiles_per_chunk, backend="auto",
+             interpret=None):
+    """Raw A @ x accumulate over the stream. x must be padded to S*W."""
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if backend == "xla":
+        return spmv_stream_xla(idx, val, seg_ids_tile, x,
+                               num_rows_padded=num_rows_padded,
+                               segment_width=segment_width)
+    if backend == "pallas":
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        x2d = x.reshape(-1, segment_width)
+        return serpens_spmv.spmv_pallas(
+            idx, val, seg_ids_chunk, x2d,
+            num_rows_padded=num_rows_padded, segment_width=segment_width,
+            tiles_per_chunk=tiles_per_chunk, interpret=interpret)
+    raise ValueError(f"unknown backend {backend!r}")

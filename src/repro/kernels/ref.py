@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the Serpens SpMV/SpMM kernels.
+
+These are the ground-truth implementations every kernel variant is tested
+against (COO scatter-add — no Serpens formatting involved).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def spmv_coo_ref(rows, cols, vals, x, m, alpha=1.0, beta=0.0, y=None):
+    """y_out = alpha * A @ x + beta * y  with A given as COO triples."""
+    acc = jnp.zeros((m,), dtype=jnp.float32)
+    acc = acc.at[rows].add(vals.astype(jnp.float32) *
+                           x.astype(jnp.float32)[cols])
+    if y is None:
+        y = jnp.zeros((m,), dtype=jnp.float32)
+    return alpha * acc + beta * y.astype(jnp.float32)
+
+
+def spmm_coo_ref(rows, cols, vals, x, m, alpha=1.0, beta=0.0, y=None):
+    """Multi-vector oracle: x is (K, N), result (M, N)."""
+    n = x.shape[1]
+    acc = jnp.zeros((m, n), dtype=jnp.float32)
+    acc = acc.at[rows].add(vals.astype(jnp.float32)[:, None] *
+                           x.astype(jnp.float32)[cols])
+    if y is None:
+        y = jnp.zeros((m, n), dtype=jnp.float32)
+    return alpha * acc + beta * y.astype(jnp.float32)
+
+
+def spmv_dense_ref(a_dense, x, alpha=1.0, beta=0.0, y=None):
+    """Dense oracle (for small property tests)."""
+    if y is None:
+        y = jnp.zeros((a_dense.shape[0],), dtype=jnp.float32)
+    return (alpha * a_dense.astype(jnp.float32) @ x.astype(jnp.float32)
+            + beta * y.astype(jnp.float32))

@@ -1,0 +1,168 @@
+"""Pallas TPU kernel for Serpens SpMV.
+
+Maps the paper's accelerator (Fig. 1) onto the TPU memory hierarchy:
+
+  HBM channel stream      → Pallas grid over fixed-size non-zero *chunks*;
+                            the chunk arrays are DMA'd HBM→VMEM by BlockSpec
+                            (double-buffered by the Pallas pipeline — the
+                            analogue of the paper's Rd modules).
+  BRAM x-segment copies   → one x segment (W fp32) staged in VMEM; which
+                            segment a chunk needs is a *scalar-prefetch*
+                            array (``seg_ids``), the TPU analogue of the
+                            paper's "stream x segment, then its non-zeros".
+  URAM output accumulators→ the full (R, LANES) fp32 accumulator lives in
+                            VMEM across the whole grid (output-stationary;
+                            every grid step maps to the same out block).
+  8 PEs × row interleave  → lane-stationary rows: lane ℓ owns rows ≡ ℓ
+                            (mod LANES); the scatter-add is conflict-free
+                            within a tile because preprocessing (format.py)
+                            guarantees distinct lane-local rows inside each
+                            RAW window.
+  CompY (α,β unit)        → fused epilogue in ops.py (y-block already local).
+
+Correctness is validated in ``interpret=True`` mode against ``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.format import ROW_BITS, COL_MASK
+
+
+def _spmv_kernel(seg_ids_ref, idx_ref, val_ref, x_ref, out_ref):
+    """One grid step: process ``tiles_per_chunk`` (sublane × lane) tiles."""
+    del seg_ids_ref  # consumed by the BlockSpec index maps only
+    c = pl.program_id(0)
+
+    @pl.when(c == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    idx = idx_ref[...]          # (TPC, SUB, LANES) int32 packed
+    vals = val_ref[...]         # (TPC, SUB, LANES) f32
+    live = idx != -1
+    rows = jnp.where(live, (idx >> ROW_BITS) & COL_MASK, 0)
+    cols = jnp.where(live, idx & COL_MASK, 0)
+
+    xseg = x_ref[...][0]        # (W,) — the staged x segment
+    xv = xseg[cols]             # on-chip random gather (paper: BRAM reads)
+    contrib = jnp.where(live, vals * xv, 0.0)
+
+    lanes = jax.lax.broadcasted_iota(jnp.int32, idx.shape, 2)
+    # Lane-stationary scatter (paper: URAM accumulate, II=1 thanks to the
+    # RAW-window reordering done offline in format.py).
+    out_ref[...] = out_ref[...].at[rows.reshape(-1), lanes.reshape(-1)].add(
+        contrib.reshape(-1))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_rows_padded", "segment_width", "tiles_per_chunk",
+                     "interpret"))
+def spmv_pallas(idx, val, seg_ids, x2d, *, num_rows_padded, segment_width,
+                tiles_per_chunk=1, interpret=True):
+    """Raw accumulate ``A @ x`` over the Serpens stream.
+
+    Args:
+      idx: int32 [num_tiles, SUB, LANES] packed stream indices.
+      val: float32 [num_tiles, SUB, LANES] stream values.
+      seg_ids: int32 [num_chunks] segment id per *chunk* (scalar prefetch).
+      x2d: float32 [num_segments, W] segment-partitioned dense vector.
+      num_rows_padded: R*LANES — accumulator size.
+    Returns:
+      acc: float32 [num_rows_padded] with acc[r] = (A @ x)[r].
+    """
+    num_tiles, sub, lanes = idx.shape
+    assert num_tiles % tiles_per_chunk == 0
+    num_chunks = num_tiles // tiles_per_chunk
+    assert seg_ids.shape == (num_chunks,), (seg_ids.shape, num_chunks)
+    r = num_rows_padded // lanes
+    w = segment_width
+
+    from jax.experimental.pallas import tpu as pltpu  # deferred import
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(num_chunks,),
+        in_specs=[
+            pl.BlockSpec((tiles_per_chunk, sub, lanes),
+                         lambda c, seg: (c, 0, 0)),
+            pl.BlockSpec((tiles_per_chunk, sub, lanes),
+                         lambda c, seg: (c, 0, 0)),
+            pl.BlockSpec((1, w), lambda c, seg: (seg[c], 0)),
+        ],
+        out_specs=pl.BlockSpec((r, lanes), lambda c, seg: (0, 0)),
+    )
+    acc = pl.pallas_call(
+        _spmv_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r, lanes), jnp.float32),
+        interpret=interpret,
+    )(seg_ids, idx, val, x2d)
+    return acc.reshape(-1)
+
+
+def _spmm_kernel(seg_ids_ref, idx_ref, val_ref, x_ref, out_ref):
+    """Multi-vector variant (the paper's Sextans contrast, Sec. 2.2):
+    the x block is (W, N) and each non-zero updates an N-wide row strip.
+    Same stream layout and output-stationary accumulation as SpMV."""
+    del seg_ids_ref
+    c = pl.program_id(0)
+
+    @pl.when(c == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    idx = idx_ref[...]                   # (TPC, SUB, LANES)
+    vals = val_ref[...]
+    live = idx != -1
+    rows = jnp.where(live, (idx >> ROW_BITS) & COL_MASK, 0)
+    cols = jnp.where(live, idx & COL_MASK, 0)
+    xseg = x_ref[...][0]                 # (W, N)
+    xv = xseg[cols]                      # (TPC, SUB, LANES, N)
+    contrib = jnp.where(live[..., None], vals[..., None] * xv, 0.0)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, idx.shape, 2)
+    out_ref[...] = out_ref[...].at[rows.reshape(-1),
+                                   lanes.reshape(-1)].add(
+        contrib.reshape(-1, contrib.shape[-1]))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_rows_padded", "segment_width", "tiles_per_chunk",
+                     "interpret"))
+def spmm_pallas(idx, val, seg_ids, x3d, *, num_rows_padded, segment_width,
+                tiles_per_chunk=1, interpret=True):
+    """A @ X for X (num_segments, W, N) → acc (num_rows_padded, N)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    num_tiles, sub, lanes = idx.shape
+    num_chunks = num_tiles // tiles_per_chunk
+    r = num_rows_padded // lanes
+    w = segment_width
+    n = x3d.shape[-1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(num_chunks,),
+        in_specs=[
+            pl.BlockSpec((tiles_per_chunk, sub, lanes),
+                         lambda c, seg: (c, 0, 0)),
+            pl.BlockSpec((tiles_per_chunk, sub, lanes),
+                         lambda c, seg: (c, 0, 0)),
+            pl.BlockSpec((1, w, n), lambda c, seg: (seg[c], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((r, lanes, n),
+                               lambda c, seg: (0, 0, 0)),
+    )
+    acc = pl.pallas_call(
+        _spmm_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r, lanes, n), jnp.float32),
+        interpret=interpret,
+    )(seg_ids, idx, val, x3d)
+    return acc.reshape(num_rows_padded, n)

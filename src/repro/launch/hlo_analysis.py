@@ -1,0 +1,336 @@
+"""Scan-aware HLO analysis — the dry-run "profiler".
+
+XLA's ``compiled.cost_analysis()`` visits each HLO instruction **once**, so
+anything inside a ``while`` loop (every ``lax.scan``: the layer stack, the
+attention q-chunk loop, the SSD chunk scan, the loss chunk loop) is counted
+once instead of trip-count times.  For scan-stacked LMs that undercounts
+FLOPs/bytes/collectives by 1-2 orders of magnitude.
+
+This module parses the optimized (SPMD-partitioned, per-device) HLO text,
+reconstructs the computation call graph with loop-trip multipliers
+(``backend_config known_trip_count``, with a while-condition-constant
+fallback), and produces scan-aware totals:
+
+  * flops        — 2·prod(out)·K for every dot (operand shapes resolved via
+                   a per-computation symbol table); convolutions likewise.
+  * hbm_bytes    — Σ (operand + output bytes) over *top-level* instructions
+                   of control computations (entry / loop bodies / branches).
+                   Fusion-interior instructions don't touch HBM and are
+                   excluded, mirroring XLA's fused cost model.
+  * collectives  — per-kind per-chip traffic (ring accounting: all-reduce
+                   2×payload, reduce-scatter input, others output) × trips.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s+([a-z][\w\-]*)\((.*)$")
+# computation header: "%name (args...) -> result {" — args may contain
+# nested tuple parens, so just grab the name and require " -> " later on.
+_COMP_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_CALL_ATTR_RE = re.compile(r"(?:condition|body|to_apply|calls)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r"known_trip_count[^0-9]*(\d+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _prod(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _txt_bytes(txt: str) -> int:
+    return sum(_DTYPE_BYTES.get(m.group(1), 0) * _prod(m.group(2))
+               for m in _SHAPE_RE.finditer(txt))
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    out_txt: str
+    operands_txt: str   # text up to the closing paren of the operand list
+    rest: str           # full remainder (operands + attrs)
+
+
+def _split_operands(rest: str) -> str:
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return rest[:i]
+    return rest
+
+
+def _logical_lines(hlo: str):
+    """Join computation headers that wrap across physical lines.
+
+    Headers start at column 0 (``%name (params...) -> ... {``) and may span
+    several lines when the parameter tuple is long; instructions are
+    indented.  Everything else passes through unchanged.
+    """
+    buf = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if buf is not None:
+            buf += " " + line.strip()
+            if line.endswith("{"):
+                yield buf
+                buf = None
+            continue
+        starts_header = (line.startswith("%") or line.startswith("ENTRY"))
+        if starts_header and not line.endswith("{"):
+            buf = line
+            continue
+        yield line
+
+
+def _parse(hlo: str):
+    comps: dict[str, dict[str, Instr]] = {}
+    order: dict[str, list[Instr]] = {}
+    cur = None
+    entry = None
+    for line in _logical_lines(hlo):
+        if not line or line.lstrip().startswith("//"):
+            continue
+        if line.endswith("{") and " -> " in line:
+            mc = _COMP_RE.match(line)
+            if mc:
+                cur = mc.group(1)
+                comps[cur] = {}
+                order[cur] = []
+                if line.lstrip().startswith("ENTRY"):
+                    entry = cur
+                continue
+        if cur is None or line.strip() == "}":
+            continue
+        mi = _INSTR_RE.match(line)
+        if mi:
+            ins = Instr(mi.group(1), mi.group(3), mi.group(2),
+                        _split_operands(mi.group(4)), mi.group(4))
+            comps[cur][ins.name] = ins
+            order[cur].append(ins)
+    return comps, order, entry
+
+
+def analyze(hlo: str, detail: bool = False) -> dict:
+    comps, order, entry = _parse(hlo)
+    if entry is None:
+        entry = next(iter(order), None)
+
+    # ---- call graph ----------------------------------------------------
+    edges: list[tuple[str, str, str]] = []       # (caller, callee, kind)
+    trips: dict[tuple[str, str], int] = {}
+    fusion_body: set[str] = set()
+    for cname, instrs in order.items():
+        for ins in instrs:
+            if ins.opcode == "while":
+                mbody = re.search(r"body=%?([\w.\-]+)", ins.rest)
+                mcond = re.search(r"condition=%?([\w.\-]+)", ins.rest)
+                trip = 1
+                mt = _TRIP_RE.search(ins.rest)
+                if mt:
+                    trip = int(mt.group(1))
+                elif mcond:
+                    for c in comps.get(mcond.group(1), {}).values():
+                        if c.opcode == "constant":
+                            md = re.match(r"(\d+)", c.operands_txt)
+                            if md:
+                                trip = max(trip, int(md.group(1)))
+                        for mc in _CONST_RE.finditer(c.out_txt + c.rest):
+                            trip = max(trip, int(mc.group(1)))
+                if mbody:
+                    edges.append((cname, mbody.group(1), "body"))
+                    trips[(cname, mbody.group(1))] = trip
+                if mcond:
+                    edges.append((cname, mcond.group(1), "cond"))
+            else:
+                for m in _CALL_ATTR_RE.finditer(ins.rest):
+                    kind = m.group(0).split("=")[0]
+                    edges.append((cname, m.group(1), kind))
+                    if ins.opcode == "fusion" and kind == "calls":
+                        fusion_body.add(m.group(1))
+                mb = _BRANCH_RE.search(ins.rest)
+                if mb:
+                    for t in mb.group(1).split(","):
+                        t = t.strip().lstrip("%")
+                        if t:
+                            edges.append((cname, t, "branch"))
+
+    mult: dict[str, float] = {entry: 1.0} if entry else {}
+    for _ in range(64):
+        changed = False
+        for caller, callee, kind in edges:
+            base = mult.get(caller)
+            if base is None:
+                continue
+            val = base * (trips.get((caller, callee), 1)
+                          if kind == "body" else 1)
+            if mult.get(callee, 0.0) < val:
+                mult[callee] = val
+                changed = True
+        if not changed:
+            break
+
+    # ---- per-instruction accounting -------------------------------------
+    def operand_bytes(cname, ins):
+        total = 0
+        table = comps[cname]
+        for m in _OPERAND_RE.finditer(ins.operands_txt):
+            ref = table.get(m.group(1))
+            if ref is not None:
+                total += _txt_bytes(ref.out_txt)
+        return total
+
+    def operand_shapes(cname, ins):
+        shapes = []
+        table = comps[cname]
+        for m in _OPERAND_RE.finditer(ins.operands_txt):
+            ref = table.get(m.group(1))
+            if ref is not None:
+                sm = _SHAPE_RE.search(ref.out_txt)
+                shapes.append([int(d) for d in sm.group(2).split(",") if d]
+                              if sm else [])
+        return shapes
+
+    flops = 0.0
+    hbm_bytes = 0.0
+    coll = {k: 0.0 for k in _COLLECTIVES}
+    coll_counts = {k: 0.0 for k in _COLLECTIVES}
+    coll_f32 = 0.0   # f32 collective payload (CPU dot-promotion artifact)
+    coll_detail: list[tuple] = []
+    hbm_detail: list[tuple] = []
+    for cname, instrs in order.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        in_fusion = cname in fusion_body
+        for ins in instrs:
+            if ins.opcode == "dot":
+                shapes = operand_shapes(cname, ins)
+                if shapes:
+                    lhs = shapes[0]
+                    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}",
+                                   ins.rest)
+                    k = 1
+                    if mc:
+                        for i in mc.group(1).split(","):
+                            if i and int(i) < len(lhs):
+                                k *= lhs[int(i)]
+                    om = _SHAPE_RE.search(ins.out_txt)
+                    out_n = _prod(om.group(2)) if om else 0
+                    flops += m * 2 * out_n * max(k, 1)
+            elif ins.opcode == "convolution":
+                shapes = operand_shapes(cname, ins)
+                om = _SHAPE_RE.search(ins.out_txt)
+                out_n = _prod(om.group(2)) if om else 0
+                if len(shapes) > 1 and shapes[1]:
+                    kk = 1
+                    for d in shapes[1][:-1]:
+                        kk *= d
+                    flops += m * 2 * out_n * kk
+            if in_fusion:
+                continue
+            if ins.opcode in ("parameter", "constant", "get-tuple-element",
+                              "tuple", "bitcast", "after-all", "iota",
+                              "while", "conditional", "call"):
+                continue  # control ops: their bodies are counted directly
+            out_b = _txt_bytes(ins.out_txt)
+            # In-place / indexed ops must not be charged the whole operand:
+            if ins.opcode == "dynamic-update-slice":
+                # read + write of the updated slice only (DUS is in-place)
+                shapes = operand_shapes(cname, ins)
+                upd = shapes[1] if len(shapes) > 1 else []
+                upd_b = 0
+                if upd:
+                    sm = _SHAPE_RE.search(ins.out_txt)
+                    dt = sm.group(1) if sm else "f32"
+                    n = 1
+                    for d in upd:
+                        n *= d
+                    upd_b = n * _DTYPE_BYTES.get(dt, 4)
+                hbm_bytes += m * 2 * upd_b
+                continue
+            if ins.opcode == "dynamic-slice":
+                hbm_bytes += m * 2 * out_b
+                continue
+            if ins.opcode == "gather":
+                hbm_bytes += m * 2 * out_b
+                continue
+            if ins.opcode == "scatter":
+                shapes = operand_shapes(cname, ins)
+                upd_n = 1
+                for d in (shapes[2] if len(shapes) > 2 else []):
+                    upd_n *= d
+                hbm_bytes += m * 3 * upd_n * 4
+                continue
+            in_b = operand_bytes(cname, ins)
+            if (ins.opcode == "fusion"
+                    and "dynamic-update-slice" in ins.name):
+                # DUS-rooted fusion: the whole-buffer operand is aliased
+                # (in-place update); traffic ≈ 2 × the update payload.
+                sm_out = _SHAPE_RE.search(ins.out_txt)
+                aliased = 0
+                for sh in operand_shapes(cname, ins):
+                    if sm_out and sh == [int(d) for d in
+                                         sm_out.group(2).split(",") if d]:
+                        n = 1
+                        for d in sh:
+                            n *= d
+                        aliased = max(aliased, n * _DTYPE_BYTES.get(
+                            sm_out.group(1), 4))
+                hbm_bytes += m * 2 * max(in_b - aliased, 0)
+                continue
+            hbm_bytes += m * (out_b + in_b)
+            base_op = next((c for c in _COLLECTIVES
+                            if ins.opcode.startswith(c)), None)
+            if base_op and not ins.opcode.endswith("done"):
+                if base_op == "all-reduce":
+                    nbytes = 2 * out_b
+                elif base_op == "reduce-scatter":
+                    nbytes = in_b
+                else:
+                    nbytes = out_b
+                coll[base_op] += m * nbytes
+                coll_counts[base_op] += m
+                sm = _SHAPE_RE.search(ins.out_txt)
+                if sm and sm.group(1) == "f32":
+                    coll_f32 += m * nbytes
+                if detail:
+                    coll_detail.append((m * nbytes, base_op, int(m),
+                                        ins.name, ins.out_txt[:80]))
+            elif detail:
+                hbm_detail.append((m * (out_b + in_b), ins.opcode, int(m),
+                                   ins.name, ins.out_txt[:80]))
+    total_coll = sum(coll.values())
+    out = {
+        "flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "collectives": {"bytes": coll, "counts": coll_counts,
+                        "total_bytes": total_coll,
+                        "f32_bytes": coll_f32,
+                        # XLA:CPU promotes bf16 dots to f32, so activation
+                        # reductions appear at 2× their TPU size; the
+                        # TPU-projected payload halves the f32 part.
+                        "tpu_projected_bytes": total_coll - 0.5 * coll_f32},
+        "num_computations": len(order),
+    }
+    if detail:
+        out["top_collectives"] = sorted(coll_detail, reverse=True)[:25]
+        out["top_hbm"] = sorted(hbm_detail, reverse=True)[:25]
+    return out

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the "pod" axis composes
+with "data" for data parallelism, and gradient reduction over "pod" crosses
+the inter-pod DCI (where gradient compression applies — train/compression).
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS *before* any jax initialization).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=axis_types)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over host devices (tests / examples)."""
+    axis_types = (jax.sharding.AxisType.Auto,) * 2
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=axis_types)
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """The composed data-parallel axes for this mesh."""
+    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))

@@ -1,0 +1,123 @@
+"""Parameter / batch / cache sharding rules (FSDP × TP × EP).
+
+Weights shard over BOTH non-trivial mesh axes: the reduction/feature dim
+over "data" (ZeRO-3 / FSDP — XLA all-gathers at use) and the parallel dim
+over "model" (Megatron TP: column-parallel in-projections, row-parallel
+out-projections; experts over "model" = EP).  Optimizer moments inherit the
+same specs (sharded optimizer states).  The "pod" axis never shards
+parameters — pods hold replicas and all-reduce gradients across DCI.
+
+Rules are name-based over the param tree paths produced by models/model.py.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# leaf name → spec builder (ndim-aware; leading scan axis gets None)
+def _leaf_spec(path: str, ndim: int) -> P:
+    name = path.split("/")[-1]
+    # 2-suffix axes: (in, out) after stripping any leading stack dims.
+    lead = (None,) * (ndim - 2)
+    col = lead + ("data", "model")     # column-parallel: D_in × D_out(tp)
+    row = lead + ("model", "data")     # row-parallel
+    if name in ("wq", "wk", "wv", "xwq", "xwk", "xwv", "wz", "wx", "wb",
+                "wc", "wdt", "w_gate", "w_up", "wq_b", "wkv_b"):
+        if name in ("w_gate", "w_up") and ndim == 4:   # MoE experts (L,E,D,F)
+            return P(None, "model", "data", None)
+        return P(*col)
+    if name in ("wo", "xwo", "w_down"):
+        if name == "w_down" and ndim == 4:             # MoE (L,E,F,D)
+            return P(None, "model", None, "data")
+        return P(*row)
+    if name in ("wq_a", "wkv_a"):                      # MLA down-proj
+        return P(*(lead + ("data", None)))
+    if name == "router":
+        return P(*(lead + ("data", None)))
+    if name == "embed":
+        return P("model", "data")                      # vocab × d
+    if name == "lm_head":
+        return P("data", "model")
+    if name == "vis_proj":
+        return P(None, "data")
+    if name in ("conv_x", "conv_b", "conv_c",          # (L, W, C)
+                "bq", "bk", "bv",                      # (L, dim)
+                "gate_norm"):                          # (L, d_inner)
+        return P(*((None,) * (ndim - 1) + ("model",)))
+    # norms, scalars (a_log, dt_bias, d_skip, q_norm, kv_norm): replicate
+    return P()
+
+
+def param_specs(params_tree):
+    """PartitionSpec pytree matching a params (or ShapeDtypeStruct) tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_tree)
+    specs = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        specs.append(_leaf_spec(key, leaf.ndim))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_specs(opt_state_tree, pspecs):
+    """Optimizer state: moments shard like params; step is replicated."""
+    return {"m": pspecs, "v": pspecs, "step": P()}
+
+
+def batch_specs(cfg, mesh):
+    """Batch dict specs: batch dim over the composed data axes."""
+    dp = (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+    spec = {"inputs": P(dp), "labels": P(dp)}
+    if cfg.vision_tokens:
+        spec["patches"] = P(dp)
+    if cfg.encoder_layers:
+        spec["frames"] = P(dp)
+    return spec
+
+
+def cache_specs(cfg, cache_tree, mesh, *, shard_seq=False):
+    """Decode-cache specs.
+
+    Default: batch dim (axis 1 of the (P, B, ...) stacked leaves) over the
+    data axes, AND the model axis on either the KV-head dim (when the
+    arch's kv-head count divides it) or the sequence dim (GQA archs with
+    few kv heads).  Without the model-axis constraint XLA all-gathers the
+    entire cache onto every model shard per decode step (§Perf iteration
+    B1: 2×137 GB/step for codeqwen decode_32k).
+
+    ``shard_seq=True`` (long_500k, batch=1): the attention-cache *sequence*
+    axis shards over "data" instead (flash-decoding split-K — serve/engine
+    pairs this with the LSE-combining decode attention).
+    """
+    dp = (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+    tp = "model"
+    ntp = mesh.shape[tp] if tp in mesh.axis_names else 1
+    kv_on_model = cfg.num_kv_heads and cfg.num_kv_heads % ntp == 0
+
+    def spec_for(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        if shard_seq and name in ("k", "v", "ckv", "krope"):
+            return P(None, None, dp)       # (P, B, S, ...): shard S
+        if shard_seq:
+            return P()                     # mamba states: tiny at B=1
+        if name in ("k", "v", "xk", "xv"):  # (P, B, S, KV, dh)
+            if kv_on_model:
+                return P(None, dp, None, tp, None)
+            if leaf.shape[2] % ntp == 0:
+                return P(None, dp, tp, None, None)   # seq over model
+            return P(None, dp)              # e.g. whisper's 1500-frame xk
+        if name in ("ckv", "krope"):       # MLA: (P, B, S, rank)
+            if leaf.shape[2] % ntp == 0:
+                return P(None, dp, tp, None)
+            return P(None, dp)
+        return P(None, dp)                 # (P, B, ...): shard B
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    specs = [spec_for(path, leaf) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def to_shardings(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

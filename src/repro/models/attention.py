@@ -1,0 +1,440 @@
+"""Attention mixers: GQA/MQA/MHA (chunked), MLA, cross-attention, decode.
+
+Memory discipline: full (S × S) score tensors are never materialized; the
+query dimension is processed in chunks of ``attn_chunk`` via ``lax.map`` so
+the peak live score block is (B, KV, G, C, S).  This is what lets the 32k
+prefill cells compile within per-device HBM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.layers import dense_init, apply_rope, shard
+# (layers._CTX powers the mesh-aware constraints below)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+def attn_init(key, cfg, dtype, cross=False):
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": dense_init(ks[0], d, qd, dtype),
+        "wk": dense_init(ks[1], d, kvd, dtype),
+        "wv": dense_init(ks[2], d, kvd, dtype),
+        "wo": dense_init(ks[3], qd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((qd,), dtype)
+        p["bk"] = jnp.zeros((kvd,), dtype)
+        p["bv"] = jnp.zeros((kvd,), dtype)
+    if cross:
+        p["xwq"] = dense_init(ks[4], d, qd, dtype)
+        p["xwk"] = dense_init(ks[5], d, kvd, dtype)
+        p["xwv"] = dense_init(ks[6], d, kvd, dtype)
+        p["xwo"] = dense_init(ks[7], qd, d, dtype)
+    return p
+
+
+def mla_init(key, cfg, dtype):
+    d, c = cfg.d_model, cfg.mla
+    h = cfg.num_heads
+    qh = c.rope_head_dim + c.nope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], d, c.q_lora_rank, dtype),
+        "q_norm": jnp.ones((c.q_lora_rank,), dtype),
+        "wq_b": dense_init(ks[1], c.q_lora_rank, h * qh, dtype),
+        "wkv_a": dense_init(ks[2], d, c.kv_lora_rank + c.rope_head_dim,
+                            dtype),
+        "kv_norm": jnp.ones((c.kv_lora_rank,), dtype),
+        "wkv_b": dense_init(ks[3], c.kv_lora_rank,
+                            h * (c.nope_head_dim + c.v_head_dim), dtype),
+        "wo": dense_init(ks[4], h * c.v_head_dim, d, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Core chunked attention
+# ---------------------------------------------------------------------------
+def _grouped(q, kv_heads):
+    """(B, S, H, dh) -> (B, S, KV, G, dh)."""
+    b, s, h, dh = q.shape
+    return q.reshape(b, s, kv_heads, h // kv_heads, dh)
+
+
+def chunked_attention(q, k, v, *, causal=True, prefix_len=0, chunk=512,
+                      q_offset=0, kv_block=1024):
+    """Flash-style attention: q processed in chunks, K/V *streamed* in
+    blocks with an online-softmax (running max / normalizer / accumulator)
+    carry — the full (chunk × Sk) score row is never materialized
+    (§Perf iteration A4).
+
+    q: (B, Sq, KV, G, dh); k, v: (B, Sk, KV, dh) → (B, Sq, KV, G, dv).
+
+    ``q_offset``: absolute position of q[0] (for decode/cross-chunk masks).
+    ``prefix_len``: positions < prefix_len are attendable by everyone
+    (prefix-LM, used by the VLM); ignored unless causal.
+    """
+    b, sq, kvh, g, dh = q.shape
+    sk = k.shape[1]
+    dv = v.shape[-1]   # may differ from dh (MLA: v_head_dim < q head dim)
+    chunk = min(chunk, sq)
+    qpad = (-sq) % chunk
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0), (0, 0)))
+    nc = q.shape[1] // chunk
+    qc = jnp.moveaxis(q.reshape(b, nc, chunk, kvh, g, dh), 1, 0)
+    scale = dh ** -0.5
+
+    kv_block = min(kv_block, sk)
+    kpad = (-sk) % kv_block
+    if kpad:  # padded keys are masked out below via kpos >= sk
+        k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    nkv = (sk + kpad) // kv_block
+
+    def one_chunk(args):
+        ci, qi = args
+        qpos = q_offset + ci * chunk + jnp.arange(chunk)
+
+        if nkv == 1:  # single block: plain softmax, no streaming carry
+            s = jnp.einsum("bckgd,bskd->bkgcs", qi, k,
+                           preferred_element_type=jnp.float32) * scale
+            kpos = jnp.arange(sk + kpad)
+            mask = kpos[None, :] < sk
+            if causal:
+                cm = kpos[None, :] <= qpos[:, None]
+                if prefix_len:
+                    cm = cm | (kpos[None, :] < prefix_len)
+                mask = mask & cm
+            else:
+                mask = jnp.broadcast_to(mask, (chunk, sk + kpad))
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            p = jax.nn.softmax(s, axis=-1)
+            return jnp.einsum("bkgcs,bskd->bckgd", p.astype(v.dtype), v)
+
+        def kv_step(carry, j):
+            m, l, acc = carry
+            kj = jax.lax.dynamic_slice_in_dim(k, j * kv_block, kv_block, 1)
+            vj = jax.lax.dynamic_slice_in_dim(v, j * kv_block, kv_block, 1)
+            kpos = j * kv_block + jnp.arange(kv_block)
+            s = jnp.einsum("bckgd,bskd->bkgcs", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            mask = kpos[None, :] < sk
+            if causal:
+                cm = kpos[None, :] <= qpos[:, None]
+                if prefix_len:
+                    cm = cm | (kpos[None, :] < prefix_len)
+                mask = mask & cm
+            else:
+                mask = jnp.broadcast_to(mask, (chunk, kv_block))
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            pv = jnp.einsum("bkgcs,bskd->bkgcd", p.astype(v.dtype), vj)
+            acc_new = acc * corr[..., None] + pv.astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((b, kvh, g, chunk), -jnp.inf, jnp.float32),
+                jnp.zeros((b, kvh, g, chunk), jnp.float32),
+                jnp.zeros((b, kvh, g, chunk, dv), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nkv))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.moveaxis(out, 3, 1).astype(v.dtype)  # (B,C,KV,G,dv)
+
+    out = jax.lax.map(one_chunk, (jnp.arange(nc), qc))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, nc * chunk, kvh, g, dv)
+    return out[:, :sq]
+
+
+# ---------------------------------------------------------------------------
+# GQA mixer: full-sequence (train / prefill) and single-token (decode)
+# ---------------------------------------------------------------------------
+def _project_qkv(p, x, cfg, prefix="", positions=None):
+    wq, wk, wv = p[prefix + "wq"], p[prefix + "wk"], p[prefix + "wv"]
+    q = jnp.einsum("...d,df->...f", x, wq)
+    k = jnp.einsum("...d,df->...f", x, wk)
+    v = jnp.einsum("...d,df->...f", x, wv)
+    if cfg.qkv_bias and not prefix:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    b, s = x.shape[:2]
+    q = q.reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    if positions is not None:
+        q = apply_rope(q, positions, cfg.rope_fraction, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_fraction, cfg.rope_theta)
+    return q, k, v
+
+
+def _constrain_heads(qg, k, v, cfg):
+    """Pin the attention layout before K/V streaming: K/V gathered over
+    sequence ONCE (inevitable under sequence parallelism — attention needs
+    every key), sharded over heads on the model axis (KV heads when they
+    divide it, else the query-group dim).  Without this, the KV-block
+    stream dynamic-slices a seq-sharded tensor and XLA re-gathers K/V per
+    block (§Perf iteration A4 refinement)."""
+    mesh = getattr(layers._CTX, "mesh", None)
+    if mesh is None:
+        return qg, k, v
+    tp = layers.tp_spec()
+    ntp = mesh.shape[tp] if tp in mesh.axis_names else 1
+    kvh, g = qg.shape[2], qg.shape[3]
+    if kvh % ntp == 0:
+        qg = shard(qg, "dp", None, "tp", None, None)
+        k = shard(k, "dp", None, "tp", None)
+        v = shard(v, "dp", None, "tp", None)
+    elif g % ntp == 0:
+        qg = shard(qg, "dp", None, None, "tp", None)
+        k = shard(k, "dp", None, None, None)
+        v = shard(v, "dp", None, None, None)
+    return qg, k, v
+
+
+def attn_forward(p, x, cfg, *, causal=True, prefix_len=0, positions=None,
+                 return_kv=False):
+    """Full-sequence attention.  x: (B, S, D)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(p, x, cfg, positions=positions)
+    qg, kc, vc = _constrain_heads(_grouped(q, cfg.num_kv_heads), k, v, cfg)
+    o = chunked_attention(qg, kc, vc,
+                          causal=causal, prefix_len=prefix_len,
+                          chunk=cfg.attn_chunk,
+                          kv_block=cfg.attn_kv_block)
+    o = o.reshape(b, s, cfg.q_dim)
+    o = shard(o, "dp", None, "tp")
+    out = jnp.einsum("...f,fd->...d", o, p["wo"])
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def quantize_kv(t):
+    """Per-token-per-head symmetric int8 (§Perf B3).
+    t: (B, S, KV, dh) → (int8 same shape, f32 scale (B, S, KV))."""
+    s = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) / 127.0
+    q = jnp.round(t.astype(jnp.float32)
+                  / jnp.maximum(s, 1e-8)[..., None])
+    return jnp.clip(q, -127, 127).astype(jnp.int8), s
+
+
+def dequantize_kv(q, s, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * s[..., None]).astype(dtype)
+
+
+def attn_decode_quant(p, x, cfg, cache_ent, pos):
+    """Single-token decode over an int8-quantized KV cache.
+    cache_ent: {"k","v": int8 (B,S,KV,dh), "k_s","v_s": f32 (B,S,KV)}."""
+    b = x.shape[0]
+    q, k, v = _project_qkv(p, x, cfg,
+                           positions=jnp.full((1, 1), pos, jnp.int32))
+    kq, ks = quantize_kv(k)
+    vq, vs = quantize_kv(v)
+    ent = dict(cache_ent)
+    for name, new in (("k", kq), ("v", vq)):
+        ent[name] = jax.lax.dynamic_update_slice_in_dim(
+            ent[name], new, pos, axis=1)
+    for name, new in (("k_s", ks), ("v_s", vs)):
+        ent[name] = jax.lax.dynamic_update_slice_in_dim(
+            ent[name], new.astype(ent[name].dtype), pos, axis=1)
+    kd = dequantize_kv(ent["k"], ent["k_s"], x.dtype)
+    vd = dequantize_kv(ent["v"], ent["v_s"], x.dtype)
+    qg = _grouped(q, cfg.num_kv_heads)
+    scale = cfg.head_dim ** -0.5
+    scores = jnp.einsum("bckgd,bskd->bkgcs", qg, kd,
+                        preferred_element_type=jnp.float32) * scale
+    mask = jnp.arange(kd.shape[1])[None, None, None, None, :] <= pos
+    scores = jnp.where(mask, scores, -1e30)
+    pr = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgcs,bskd->bckgd", pr.astype(vd.dtype), vd)
+    o = o.reshape(b, 1, cfg.q_dim)
+    return jnp.einsum("...f,fd->...d", o, p["wo"]), ent
+
+
+def attn_decode(p, x, cfg, cache_k, cache_v, pos):
+    """Single-token decode.  x: (B, 1, D); cache_*: (B, Smax, KV, dh);
+    pos: scalar int32 — index at which the new token's K/V is written."""
+    b = x.shape[0]
+    q, k, v = _project_qkv(p, x, cfg,
+                           positions=jnp.full((1, 1), pos, jnp.int32))
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), pos, axis=1)
+    qg = _grouped(q, cfg.num_kv_heads)                   # (B,1,KV,G,dh)
+    scale = cfg.head_dim ** -0.5
+    scores = jnp.einsum("bckgd,bskd->bkgcs", qg, cache_k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = jnp.arange(cache_k.shape[1])[None, None, None, None, :] <= pos
+    scores = jnp.where(mask, scores, -1e30)
+    pr = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgcs,bskd->bckgd", pr.astype(cache_v.dtype), cache_v)
+    o = o.reshape(b, 1, cfg.q_dim)
+    return jnp.einsum("...f,fd->...d", o, p["wo"]), cache_k, cache_v
+
+
+def attn_decode_seqsharded(p, x, cfg, cache_k, cache_v, pos, mesh, dp):
+    """Decode attention with the KV cache sharded along *sequence* over the
+    data axes (long_500k, batch=1): flash-decoding split-K mapped onto the
+    mesh.  Each shard attends over its local KV slice and the partial
+    (max, numerator, denominator) triples are combined with a pmax/psum
+    log-sum-exp reduction — one tiny collective instead of an all-gather of
+    a 500k-token cache.
+
+    cache_*: (B, Smax, KV, dh) with Smax sharded over ``dp``.
+    """
+    from jax.sharding import PartitionSpec as P
+    b = x.shape[0]
+    q, k_new, v_new = _project_qkv(
+        p, x, cfg, positions=jnp.full((1, 1), pos, jnp.int32))
+    qg = _grouped(q, cfg.num_kv_heads)                  # (B,1,KV,G,dh)
+    scale = cfg.head_dim ** -0.5
+
+    def body(ck, cv, qg_l, kn, vn):
+        s_loc = ck.shape[1]
+        idx = 0
+        for a in dp:
+            idx = idx * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+        off = idx * s_loc
+        # write the new token's K/V into whichever shard owns `pos`
+        lp = jnp.clip(pos - off, 0, s_loc - 1)
+        own = (pos >= off) & (pos < off + s_loc)
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            ck, jnp.where(own, kn, jax.lax.dynamic_slice_in_dim(
+                ck, lp, 1, axis=1)).astype(ck.dtype), lp, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cv, jnp.where(own, vn, jax.lax.dynamic_slice_in_dim(
+                cv, lp, 1, axis=1)).astype(cv.dtype), lp, axis=1)
+        scores = jnp.einsum("bckgd,bskd->bkgcs", qg_l, ck,
+                            preferred_element_type=jnp.float32) * scale
+        mask = (off + jnp.arange(s_loc)) <= pos
+        scores = jnp.where(mask[None, None, None, None, :], scores, -1e30)
+        m = jnp.max(scores, axis=-1)                    # (B,KV,G,C=1)
+        pexp = jnp.exp(scores - m[..., None])
+        pexp = jnp.where(mask[None, None, None, None, :], pexp, 0.0)
+        num = jnp.einsum("bkgcs,bskd->bckgd", pexp.astype(jnp.float32),
+                         cv.astype(jnp.float32))        # (B,1,KV,G,dh)
+        den = pexp.sum(-1)                              # (B,KV,G,1)
+        m_g = jax.lax.pmax(m, dp)
+        corr = jnp.exp(m - m_g)                         # (B,KV,G,1)
+        corr_n = jnp.moveaxis(corr, -1, 1)[..., None]   # (B,1,KV,G,1)
+        num = jax.lax.psum(num * corr_n, dp)
+        den = jax.lax.psum(den * corr, dp)
+        out = num / jnp.moveaxis(den, -1, 1)[..., None]
+        return out.astype(cv.dtype), ck, cv
+
+    f = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, dp), P(None, dp), P(), P(), P()),
+        out_specs=(P(), P(None, dp), P(None, dp)))
+    o, cache_k, cache_v = f(cache_k, cache_v, qg, k_new, v_new)
+    o = o.reshape(b, 1, cfg.q_dim)
+    return jnp.einsum("...f,fd->...d", o, p["wo"]), cache_k, cache_v
+
+
+def cross_attn_forward(p, x, enc_out, cfg):
+    """Decoder→encoder cross attention (whisper).  No RoPE on cross K."""
+    b, s, _ = x.shape
+    se = enc_out.shape[1]
+    q = jnp.einsum("...d,df->...f", x, p["xwq"]).reshape(
+        b, s, cfg.num_heads, cfg.head_dim)
+    k = jnp.einsum("...d,df->...f", enc_out, p["xwk"]).reshape(
+        b, se, cfg.num_kv_heads, cfg.head_dim)
+    v = jnp.einsum("...d,df->...f", enc_out, p["xwv"]).reshape(
+        b, se, cfg.num_kv_heads, cfg.head_dim)
+    o = chunked_attention(_grouped(q, cfg.num_kv_heads), k, v, causal=False,
+                          chunk=cfg.attn_chunk,
+                          kv_block=cfg.attn_kv_block)
+    o = o.reshape(b, s, cfg.q_dim)
+    return jnp.einsum("...f,fd->...d", o, p["xwo"])
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention) — full-sequence and decode.
+# The decode cache stores only (c_kv, k_rope): the paper-faithful latent
+# compression (DeepSeek-V2); K/V are re-expanded through wkv_b.
+# ---------------------------------------------------------------------------
+def _mla_qkv(p, x, cfg, positions):
+    c = cfg.mla
+    h = cfg.num_heads
+    cq = layers.rms_norm(jnp.einsum("...d,df->...f", x, p["wq_a"]),
+                         p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("...d,df->...f", cq, p["wq_b"])
+    b, s = x.shape[:2]
+    q = q.reshape(b, s, h, c.rope_head_dim + c.nope_head_dim)
+    q_rope = apply_rope(q[..., :c.rope_head_dim], positions,
+                        1.0, cfg.rope_theta)
+    q = jnp.concatenate([q_rope, q[..., c.rope_head_dim:]], -1)
+
+    kv_a = jnp.einsum("...d,df->...f", x, p["wkv_a"])
+    c_kv = kv_a[..., :c.kv_lora_rank]
+    k_rope = kv_a[..., c.kv_lora_rank:]                 # (B,S,rope_dim)
+    k_rope = apply_rope(k_rope[..., None, :], positions, 1.0,
+                        cfg.rope_theta)                 # (B,S,1,rope)
+    return q, c_kv, k_rope
+
+
+def _mla_expand(p, c_kv, k_rope, cfg):
+    c = cfg.mla
+    h = cfg.num_heads
+    b, s = c_kv.shape[:2]
+    kv = jnp.einsum("...d,df->...f",
+                    layers.rms_norm(c_kv, p["kv_norm"], cfg.norm_eps),
+                    p["wkv_b"]).reshape(b, s, h, c.nope_head_dim
+                                        + c.v_head_dim)
+    k_nope, v = kv[..., :c.nope_head_dim], kv[..., c.nope_head_dim:]
+    k = jnp.concatenate(
+        [jnp.broadcast_to(k_rope, (b, s, h, c.rope_head_dim)), k_nope], -1)
+    return k, v
+
+
+def mla_forward(p, x, cfg, *, positions=None, return_kv=False):
+    b, s, _ = x.shape
+    c = cfg.mla
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, c_kv, k_rope = _mla_qkv(p, x, cfg, positions)
+    k, v = _mla_expand(p, c_kv, k_rope, cfg)
+    # q grouped with KV=H, G=1: (B, S, H, 1, dh)
+    o = chunked_attention(q[:, :, :, None, :], k, v, causal=cfg.causal,
+                          chunk=cfg.attn_chunk,
+                          kv_block=cfg.attn_kv_block)
+    o = o.reshape(b, s, cfg.num_heads * c.v_head_dim)
+    o = shard(o, "dp", None, "tp")
+    out = jnp.einsum("...f,fd->...d", o, p["wo"])
+    if return_kv:
+        return out, (c_kv, k_rope[:, :, 0, :])
+    return out
+
+
+def mla_decode(p, x, cfg, cache_ckv, cache_krope, pos):
+    """cache_ckv: (B, Smax, kv_lora); cache_krope: (B, Smax, rope_dim)."""
+    c = cfg.mla
+    b = x.shape[0]
+    q, c_kv, k_rope = _mla_qkv(
+        p, x, cfg, jnp.full((1, 1), pos, jnp.int32))
+    cache_ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache_ckv, c_kv.astype(cache_ckv.dtype), pos, axis=1)
+    cache_krope = jax.lax.dynamic_update_slice_in_dim(
+        cache_krope, k_rope[:, :, 0, :].astype(cache_krope.dtype), pos,
+        axis=1)
+    k, v = _mla_expand(p, cache_ckv, cache_krope[:, :, None, :], cfg)
+    scale = (c.rope_head_dim + c.nope_head_dim) ** -0.5
+    scores = jnp.einsum("bchd,bshd->bhcs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = jnp.arange(k.shape[1])[None, None, None, :] <= pos
+    scores = jnp.where(mask, scores, -1e30)
+    pr = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhcs,bshd->bchd", pr.astype(v.dtype), v)
+    o = o.reshape(b, 1, cfg.num_heads * c.v_head_dim)
+    return (jnp.einsum("...f,fd->...d", o, p["wo"]),
+            cache_ckv, cache_krope)

@@ -1,0 +1,253 @@
+"""Shared neural-net building blocks (pure-functional, dict-of-arrays params).
+
+No framework dependency: a "module" is an ``init_*`` function returning a
+nested dict of arrays plus an ``apply``-style function.  Parameter trees are
+scan-stacked along a leading ``period`` axis by the model builder.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Mesh-aware sharding-constraint helper.  Model code calls ``shard(x, spec)``;
+# it is a no-op unless a mesh context has been installed (launch code does
+# this), so smoke tests on 1 CPU device run unchanged.
+# ---------------------------------------------------------------------------
+_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def mesh_context(mesh, dp_axes=("data",), tp_axis="model",
+                 seq_shard_kv=False):
+    _CTX.mesh, _CTX.dp, _CTX.tp = mesh, tuple(dp_axes), tp_axis
+    _CTX.seq_shard_kv = seq_shard_kv
+    try:
+        yield
+    finally:
+        _CTX.mesh = None
+        _CTX.seq_shard_kv = False
+
+
+def seq_shard_kv_active():
+    return (getattr(_CTX, "mesh", None) is not None
+            and getattr(_CTX, "seq_shard_kv", False))
+
+
+def dp_spec():
+    return getattr(_CTX, "dp", ("data",))
+
+
+def tp_spec():
+    return getattr(_CTX, "tp", "model")
+
+
+def shard(x, *axes):
+    """with_sharding_constraint if a mesh context is active, else identity.
+
+    ``axes`` entries: "dp" (the composed data axes), "tp", None.
+    """
+    mesh = getattr(_CTX, "mesh", None)
+    if mesh is None:
+        return x
+    resolved = tuple(
+        (_CTX.dp if a == "dp" else _CTX.tp if a == "tp" else a)
+        for a in axes)
+    return jax.lax.with_sharding_constraint(
+        x, jax.NamedSharding(mesh, P(*resolved)))
+
+
+# ---------------------------------------------------------------------------
+# Initializers / primitives
+# ---------------------------------------------------------------------------
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+def dense_init(key, d_in, d_out, dtype):
+    scale = d_in ** -0.5
+    return (jax.random.truncated_normal(key, -2, 2, (d_in, d_out),
+                                        jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab, d, dtype):
+    # stddev 1/sqrt(d): the input path rescales by sqrt(d), and the tied
+    # output head then produces O(1) logits.
+    return (jax.random.truncated_normal(key, -2, 2, (vocab, d), jnp.float32)
+            * d ** -0.5).astype(dtype)
+
+
+def rms_norm(x, scale, eps=1e-5):
+    """RMSNorm: f32 for the variance *reduction* only; the elementwise
+    rescale stays in the activation dtype.  Materializing the full hidden
+    state in f32 cost ~6×(B,S,D)×4B of HBM traffic per layer (§Perf
+    iteration A1) for no accuracy benefit — the f32 part that matters is
+    the mean-of-squares accumulation, which reduces to (B,S,1)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1,
+                   keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * scale.astype(x.dtype)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE (supports fractional application — chatglm3's "2d RoPE" = 0.5)
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim, rope_fraction, theta):
+    rot_dim = int(head_dim * rope_fraction)
+    rot_dim -= rot_dim % 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32)
+                           / rot_dim))
+    return inv, rot_dim
+
+
+def apply_rope(x, positions, rope_fraction=1.0, theta=10_000.0):
+    """x: (..., S, H, dh); positions broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    inv, rot_dim = rope_freqs(dh, rope_fraction, theta)
+    if rot_dim == 0:
+        return x
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., None, :]                      # (..., S, 1, rot/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x_rot, x_pass = x[..., :rot_dim], x[..., rot_dim:]
+    x1, x2 = x_rot[..., ::2], x_rot[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    y = jnp.stack([y1, y2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([y.astype(x.dtype), x_pass], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# FFN (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+def ffn_init(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def ffn_apply(params, x, act_name="silu", serve_sharded=False):
+    if serve_sharded:
+        mesh = getattr(_CTX, "mesh", None)
+        if mesh is not None:
+            return _ffn_serve_sharded(params, x, act_name, mesh)
+    act = activation(act_name)
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    h = act(g) * u
+    h = shard(h, "dp", None, "tp")
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+def serve_linear_col(x, w):
+    """Weight-stationary column-parallel linear for decode (§Perf B4).
+
+    w: (D_in@data, F@model) as left by ZeRO-3×TP; x: (B, S, D_in) batch-
+    sharded (or replicated).  Tokens are gathered over data (tiny), each
+    shard contracts its resident D-slice, partials are psum'd over data.
+    Output: (B, S, F) with F sharded over model.  No weight movement.
+    """
+    mesh = getattr(_CTX, "mesh", None)
+    if mesh is None:
+        return jnp.einsum("...d,df->...f", x, w)
+    from jax.sharding import PartitionSpec as P
+    dp, tp = dp_spec(), tp_spec()
+    b = x.shape[0]
+    ndp = 1
+    for a in dp:
+        ndp *= mesh.shape[a]
+    tokens_sharded = (b % ndp == 0) and ndp > 1 and b > 1
+
+    def body(wl, xl):
+        xa = (jax.lax.all_gather(xl, dp, axis=0, tiled=True)
+              if tokens_sharded else xl)
+        d_loc = wl.shape[0]
+        d_idx = 0
+        for a in dp:
+            d_idx = d_idx * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+        x_slice = jax.lax.dynamic_slice_in_dim(xa, d_idx * d_loc, d_loc,
+                                               axis=2)
+        return jax.lax.psum(jnp.einsum("bsd,df->bsf", x_slice, wl), dp)
+
+    f = jax.shard_map(body, mesh=mesh,
+                      in_specs=(P(dp, tp),
+                                P(dp) if tokens_sharded else P()),
+                      out_specs=P(None, None, tp))
+    return f(w, x)
+
+
+def serve_linear_row(x, w):
+    """Weight-stationary row-parallel linear for decode (§Perf B4).
+
+    w: (F@model, D@data); x: (B, S, F) with F sharded over model (e.g. the
+    output of serve_linear_col chains).  Partials psum over model; output
+    (B, S, D) with D sharded over data.
+    """
+    mesh = getattr(_CTX, "mesh", None)
+    if mesh is None:
+        return jnp.einsum("...f,fd->...d", x, w)
+    from jax.sharding import PartitionSpec as P
+    dp, tp = dp_spec(), tp_spec()
+
+    def body(wl, xl):
+        return jax.lax.psum(jnp.einsum("bsf,fd->bsd", xl, wl), tp)
+
+    f = jax.shard_map(body, mesh=mesh,
+                      in_specs=(P(tp, dp), P(None, None, tp)),
+                      out_specs=P(None, None, dp))
+    return f(w, x)
+
+
+def _ffn_serve_sharded(params, x, act_name, mesh):
+    """Decode-time FFN with weight-stationary scheduling (§Perf B2).
+
+    ZeRO-3 leaves w_gate/w_up sharded (D@data, F@model); at one token per
+    request, letting XLA all-gather those weights costs GBs per step.
+    Instead: all-gather the (tiny) tokens over data, contract against the
+    resident weight shard, psum the partial activations over data, apply
+    the row-parallel down-projection, psum over model.  Per-step traffic
+    drops from O(weight bytes) to O(token bytes).
+    """
+    from jax.sharding import PartitionSpec as P
+    dp, tp = dp_spec(), tp_spec()
+    b, s, d = x.shape
+    ndp = 1
+    for a in dp:
+        ndp *= mesh.shape[a]
+    tokens_sharded = (b % ndp == 0) and ndp > 1 and b > 1
+    act = activation(act_name)
+
+    def body(wg, wu, wd, xl):
+        if tokens_sharded:
+            xa = jax.lax.all_gather(xl, dp, axis=0, tiled=True)
+        else:
+            xa = xl
+        d_loc = wg.shape[0]
+        d_idx = 0
+        for a in dp:
+            d_idx = d_idx * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+        x_slice = jax.lax.dynamic_slice_in_dim(
+            xa, d_idx * d_loc, d_loc, axis=2)           # (B,S,D/ndp)
+        g = jax.lax.psum(jnp.einsum("bsd,df->bsf", x_slice, wg), dp)
+        u = jax.lax.psum(jnp.einsum("bsd,df->bsf", x_slice, wu), dp)
+        h = act(g) * u                                   # (B,S,F/ntp)
+        o = jnp.einsum("bsf,fd->bsd", h, wd)             # (B,S,D/ndp) part.
+        return jax.lax.psum(o, tp)
+
+    tok_spec = P(dp) if tokens_sharded else P()
+    f = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(dp, tp), P(dp, tp), P(tp, dp), tok_spec),
+        out_specs=P(None, None, dp))
+    return f(params["w_gate"], params["w_up"], params["w_down"], x)

@@ -1,0 +1,448 @@
+"""Unified LM: a scan-stack of *periods*, each a static layout of sub-layers.
+
+One implementation covers all ten assigned architectures:
+  dense GQA decoders (chatglm3 / qwen / codeqwen), MLA (minicpm3),
+  MoE decoders (llama4 scout & maverick), pure SSM (mamba2), the Jamba
+  hybrid (8-sub-layer period), the Whisper encoder-decoder, and the
+  PaliGemma VLM (vision-prefix prefix-LM).
+
+Interface (all pure functions over a params pytree):
+  init(rng)                                → params
+  loss(params, batch)                      → (scalar, metrics)
+  prefill(params, batch, max_len)          → (last_logits, cache)
+  decode_step(params, cache, tokens, pos)  → (logits, cache)
+  init_cache(batch_size, max_len)          → cache
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    _dtype, dense_init, embed_init, ffn_apply, ffn_init, rms_norm, shard)
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.pdtype = _dtype(cfg.param_dtype)
+        self.adtype = _dtype(cfg.activation_dtype)
+
+    # ------------------------------------------------------------------
+    # Init
+    # ------------------------------------------------------------------
+    def _init_sublayer(self, key, mixer, ffn):
+        cfg, dt = self.cfg, self.pdtype
+        ks = jax.random.split(key, 4)
+        p = {}
+        if mixer in ("attn", "attn_cross"):
+            p["norm_in"] = jnp.ones((cfg.d_model,), dt)
+            if cfg.mla:
+                p["mixer"] = attn.mla_init(ks[0], cfg, dt)
+            else:
+                p["mixer"] = attn.attn_init(ks[0], cfg, dt,
+                                            cross=(mixer == "attn_cross"))
+            if mixer == "attn_cross":
+                p["norm_cross"] = jnp.ones((cfg.d_model,), dt)
+        elif mixer == "mamba":
+            p["norm_in"] = jnp.ones((cfg.d_model,), dt)
+            p["mixer"] = ssm_mod.ssm_init(ks[0], cfg, dt)
+        if ffn == "dense":
+            p["norm_ffn"] = jnp.ones((cfg.d_model,), dt)
+            p["ffn"] = ffn_init(ks[1], cfg.d_model, cfg.d_ff, dt)
+        elif ffn == "moe":
+            p["norm_ffn"] = jnp.ones((cfg.d_model,), dt)
+            p["ffn"] = moe_mod.moe_init(ks[1], cfg, dt)
+        return p
+
+    def _init_period(self, key):
+        ks = jax.random.split(key, len(self.cfg.layout))
+        return {f"sub{i}": self._init_sublayer(ks[i], mixer, ffn)
+                for i, (mixer, ffn) in enumerate(self.cfg.layout)}
+
+    def init(self, rng):
+        cfg, dt = self.cfg, self.pdtype
+        keys = jax.random.split(rng, 8)
+        params = {
+            "embed": embed_init(keys[0], cfg.vocab_padded, cfg.d_model, dt),
+            "final_norm": jnp.ones((cfg.d_model,), dt),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(keys[1], cfg.d_model,
+                                           cfg.vocab_padded, dt)
+        pkeys = jax.random.split(keys[2], cfg.num_periods)
+        params["blocks"] = jax.vmap(self._init_period)(pkeys)
+        if cfg.encoder_layers:
+            ekeys = jax.random.split(keys[3], cfg.encoder_layers)
+
+            def enc_layer(k):
+                ks = jax.random.split(k, 2)
+                return {
+                    "norm_in": jnp.ones((cfg.d_model,), dt),
+                    "mixer": attn.attn_init(ks[0], cfg, dt),
+                    "norm_ffn": jnp.ones((cfg.d_model,), dt),
+                    "ffn": ffn_init(ks[1], cfg.d_model, cfg.d_ff, dt),
+                }
+            params["encoder"] = jax.vmap(enc_layer)(ekeys)
+            params["enc_final_norm"] = jnp.ones((cfg.d_model,), dt)
+        if cfg.vision_tokens:
+            params["vis_proj"] = dense_init(keys[4], cfg.vision_embed_dim,
+                                            cfg.d_model, dt)
+        return params
+
+    # ------------------------------------------------------------------
+    # Shared block machinery
+    # ------------------------------------------------------------------
+    def _period_fwd(self, pp, x, *, mode, enc_out, prefix_len, cache=None,
+                    pos=None):
+        """One period forward.
+
+        mode: "train" | "prefill" | "decode".
+        Returns (x, aux_losses, new_cache) where new_cache is a dict of the
+        stateful sub-layers' tensors (built in prefill, updated in decode).
+        """
+        cfg = self.cfg
+        aux = {"load_balance": 0.0, "router_z": 0.0}
+        new_cache = {}
+        seq_par = (cfg.sequence_parallel and mode != "decode")
+
+        def res(t):
+            """Constrain a row-parallel sub-layer output to the
+            sequence-parallel layout — the psum that XLA must insert for
+            the partial-sum contraction then lowers to a reduce-scatter
+            (§Perf iteration A3) instead of all-reduce."""
+            if seq_par and t.shape[1] > 1:
+                return shard(t, "dp", "tp", None)
+            return t
+
+        for i, (mixer, ffn) in enumerate(cfg.layout):
+            sp = pp[f"sub{i}"]
+            key = f"sub{i}"
+            if mixer in ("attn", "attn_cross"):
+                h = rms_norm(x, sp["norm_in"], cfg.norm_eps)
+                if mode == "decode":
+                    c = cache[key]
+                    if cfg.mla:
+                        out, ckv, krope = attn.mla_decode(
+                            sp["mixer"], h, cfg, c["ckv"], c["krope"], pos)
+                        new_cache[key] = {"ckv": ckv, "krope": krope}
+                    elif "k_s" in c:        # int8 cache (§Perf B3)
+                        out, ent = attn.attn_decode_quant(
+                            sp["mixer"], h, cfg, c, pos)
+                        new_cache[key] = ent
+                    else:
+                        from repro.models import layers as _L
+                        if _L.seq_shard_kv_active():
+                            out, ck, cv = attn.attn_decode_seqsharded(
+                                sp["mixer"], h, cfg, c["k"], c["v"], pos,
+                                _L._CTX.mesh, _L.dp_spec())
+                        else:
+                            out, ck, cv = attn.attn_decode(
+                                sp["mixer"], h, cfg, c["k"], c["v"], pos)
+                        new_cache[key] = dict(c, k=ck, v=cv)
+                else:
+                    if cfg.mla:
+                        out, kv = attn.mla_forward(sp["mixer"], h, cfg,
+                                                   return_kv=True)
+                        if mode == "prefill":
+                            new_cache[key] = {"ckv": kv[0], "krope": kv[1]}
+                    else:
+                        out, kv = attn.attn_forward(
+                            sp["mixer"], h, cfg, causal=cfg.causal,
+                            prefix_len=prefix_len, return_kv=True)
+                        if mode == "prefill":
+                            if cfg.kv_cache_quant and mixer == "attn":
+                                kq, ks = attn.quantize_kv(kv[0])
+                                vq, vs = attn.quantize_kv(kv[1])
+                                new_cache[key] = {"k": kq, "k_s": ks,
+                                                  "v": vq, "v_s": vs}
+                            else:
+                                new_cache[key] = {"k": kv[0], "v": kv[1]}
+                x = x + res(out)
+                if mixer == "attn_cross":
+                    h = rms_norm(x, sp["norm_cross"], cfg.norm_eps)
+                    if mode == "decode":
+                        out = _cross_decode(sp["mixer"], h, cache[key], cfg)
+                    else:
+                        out = attn.cross_attn_forward(sp["mixer"], h,
+                                                      enc_out, cfg)
+                        if mode == "prefill":
+                            new_cache[key].update(_cross_kv(
+                                sp["mixer"], enc_out, cfg))
+                    x = x + res(out)
+            elif mixer == "mamba":
+                h = rms_norm(x, sp["norm_in"], cfg.norm_eps)
+                if mode == "decode":
+                    out, sc = ssm_mod.ssm_decode(sp["mixer"], h, cfg,
+                                                 cache[key])
+                    new_cache[key] = sc
+                elif mode == "prefill":
+                    out, (hf, tails) = ssm_mod.ssm_forward(
+                        sp["mixer"], h, cfg, return_state=True)
+                    new_cache[key] = {
+                        "h": hf, "conv_x": tails[0], "conv_b": tails[1],
+                        "conv_c": tails[2]}
+                else:
+                    out = ssm_mod.ssm_forward(sp["mixer"], h, cfg)
+                x = x + res(out)
+            if ffn == "dense":
+                h = rms_norm(x, sp["norm_ffn"], cfg.norm_eps)
+                x = x + res(ffn_apply(sp["ffn"], h, cfg.ffn_activation,
+                                      serve_sharded=(mode == "decode")))
+            elif ffn == "moe":
+                h = rms_norm(x, sp["norm_ffn"], cfg.norm_eps)
+                out, a = moe_mod.moe_apply(sp["ffn"], h, cfg,
+                                           exact=(mode != "train"),
+                                           decode=(mode == "decode"))
+                aux = {k: aux[k] + a[k] for k in aux}
+                x = x + res(out)
+            if cfg.sequence_parallel and mode != "decode" \
+                    and x.shape[1] > 1:
+                x = shard(x, "dp", "tp", None)   # sequence parallel
+            else:
+                x = shard(x, "dp", None, None)
+        return x, aux, new_cache
+
+    def _stack_forward(self, params, x, *, mode, enc_out=None, prefix_len=0,
+                       cache=None, pos=None):
+        """Scan the period stack.  Returns (x, aux, stacked_cache)."""
+        cfg = self.cfg
+
+        def body(carry, xs):
+            xc = carry
+            pp = xs if cache is None else xs[0]
+            cc = None if cache is None else xs[1]
+            out, aux, ncache = self._period_fwd(
+                pp, xc, mode=mode, enc_out=enc_out, prefix_len=prefix_len,
+                cache=cc, pos=pos)
+            return out, (aux, ncache)
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        xs = params["blocks"] if cache is None else (params["blocks"], cache)
+        x, (auxs, caches) = jax.lax.scan(body, x, xs)
+        aux = jax.tree.map(jnp.sum, auxs)
+        return x, aux, caches
+
+    def _encode(self, params, frames):
+        """Whisper encoder over stub frame embeddings (B, Se, D)."""
+        cfg = self.cfg
+
+        def body(x, lp):
+            h = rms_norm(x, lp["norm_in"], cfg.norm_eps)
+            x = x + attn.attn_forward(lp["mixer"], h, cfg, causal=False)
+            h = rms_norm(x, lp["norm_ffn"], cfg.norm_eps)
+            x = x + ffn_apply(lp["ffn"], h, cfg.ffn_activation)
+            return x, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, frames.astype(self.adtype),
+                            params["encoder"])
+        return rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+    def _embed_inputs(self, params, batch):
+        """Token (+vision prefix) embedding.  Returns (x, prefix_len,
+        enc_out)."""
+        cfg = self.cfg
+        tokens = batch["inputs"]
+        x = params["embed"][tokens].astype(self.adtype)
+        x = x * (cfg.d_model ** 0.5)
+        prefix_len = 0
+        enc_out = None
+        if cfg.vision_tokens:
+            vis = jnp.einsum("bnd,df->bnf",
+                             batch["patches"].astype(self.adtype),
+                             params["vis_proj"])
+            x = jnp.concatenate([vis, x], axis=1)
+            prefix_len = cfg.vision_tokens
+        if cfg.encoder_layers:
+            enc_out = self._encode(params, batch["frames"])
+        return x, prefix_len, enc_out
+
+    def _lm_logits_chunk(self, params, h):
+        cfg = self.cfg
+        w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.einsum("...d,dv->...v", h, w,
+                            preferred_element_type=jnp.float32)
+        if cfg.logit_softcap:
+            c = cfg.logit_softcap
+            logits = jnp.tanh(logits / c) * c
+        if cfg.vocab_padded != cfg.vocab_size:   # mask pad-vocab logits
+            pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab_size
+            logits = jnp.where(pad_mask, -1e30, logits)
+        return logits
+
+    # ------------------------------------------------------------------
+    # Training loss (chunked vocab-sharded xent)
+    # ------------------------------------------------------------------
+    def loss(self, params, batch):
+        cfg = self.cfg
+        x, prefix_len, enc_out = self._embed_inputs(params, batch)
+        x = shard(x, "dp", None, None)
+        x, aux, _ = self._stack_forward(
+            params, x, mode="train", enc_out=enc_out, prefix_len=prefix_len)
+        h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        if cfg.vision_tokens:
+            h = h[:, cfg.vision_tokens:]
+        labels = batch["labels"]
+        b, s = labels.shape
+        chunk = min(cfg.loss_chunk, s)
+        pad = (-s) % chunk
+        if pad:
+            h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+            labels = jnp.pad(labels, ((0, 0), (0, pad)),
+                             constant_values=-1)
+        nc = (s + pad) // chunk
+        hc = jnp.moveaxis(h.reshape(b, nc, chunk, -1), 1, 0)
+        lc = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+
+        def one(args):
+            hh, ll = args
+            logits = self._lm_logits_chunk(params, hh)     # (B, C, V) f32
+            logits = shard(logits, "dp", None, "tp")
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(
+                logits, jnp.maximum(ll, 0)[..., None], axis=-1)[..., 0]
+            valid = (ll >= 0).astype(jnp.float32)
+            return ((lse - gold) * valid).sum(), valid.sum()
+
+        body = one
+        if cfg.remat:
+            body = jax.checkpoint(one)
+        sums, counts = jax.lax.map(body, (hc, lc))
+        total, count = sums.sum(), jnp.maximum(counts.sum(), 1.0)
+        xent = total / count
+        loss = xent + aux["load_balance"] + aux["router_z"]
+        return loss, {"xent": xent, **aux, "tokens": count}
+
+    # ------------------------------------------------------------------
+    # Serving: prefill + decode
+    # ------------------------------------------------------------------
+    def _pad_cache_seq(self, caches, max_len):
+        """Grow prefill attention caches to max_len along the seq axis."""
+        def grow(path_leaf):
+            return path_leaf
+
+        def pad_leaf(leaf, name):
+            if name in ("k", "v", "ckv", "krope", "k_s", "v_s"):
+                pad = max_len - leaf.shape[2]
+                if pad > 0:
+                    width = [(0, 0)] * leaf.ndim
+                    width[2] = (0, pad)
+                    return jnp.pad(leaf, width)
+            return leaf
+
+        out = {}
+        for key, sub in caches.items():
+            out[key] = {n: pad_leaf(v, n) for n, v in sub.items()}
+        return out
+
+    def prefill(self, params, batch, max_len):
+        """Run the prompt; returns (last-position logits, cache)."""
+        cfg = self.cfg
+        x, prefix_len, enc_out = self._embed_inputs(params, batch)
+        x, aux, caches = self._stack_forward(
+            params, x, mode="prefill", enc_out=enc_out,
+            prefix_len=prefix_len)
+        h = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+        logits = self._lm_logits_chunk(params, h)
+        caches = self._pad_cache_seq(caches, max_len)
+        return logits[:, 0], caches
+
+    def init_cache(self, batch_size, max_len, dtype=None):
+        """Zero decode cache (one entry per stateful sub-layer × period)."""
+        cfg = self.cfg
+        dt = dtype or self.adtype
+        p = cfg.num_periods
+        cache = {}
+        for i, (mixer, ffn) in enumerate(cfg.layout):
+            key = f"sub{i}"
+            if mixer in ("attn", "attn_cross"):
+                if cfg.mla:
+                    c = cfg.mla
+                    ent = {
+                        "ckv": jnp.zeros((p, batch_size, max_len,
+                                          c.kv_lora_rank), dt),
+                        "krope": jnp.zeros((p, batch_size, max_len,
+                                            c.rope_head_dim), dt),
+                    }
+                elif cfg.kv_cache_quant and mixer == "attn":
+                    ent = {
+                        "k": jnp.zeros((p, batch_size, max_len,
+                                        cfg.num_kv_heads, cfg.head_dim),
+                                       jnp.int8),
+                        "v": jnp.zeros((p, batch_size, max_len,
+                                        cfg.num_kv_heads, cfg.head_dim),
+                                       jnp.int8),
+                        "k_s": jnp.zeros((p, batch_size, max_len,
+                                          cfg.num_kv_heads), jnp.float32),
+                        "v_s": jnp.zeros((p, batch_size, max_len,
+                                          cfg.num_kv_heads), jnp.float32),
+                    }
+                else:
+                    ent = {
+                        "k": jnp.zeros((p, batch_size, max_len,
+                                        cfg.num_kv_heads, cfg.head_dim), dt),
+                        "v": jnp.zeros((p, batch_size, max_len,
+                                        cfg.num_kv_heads, cfg.head_dim), dt),
+                    }
+                if mixer == "attn_cross":
+                    ent["xk"] = jnp.zeros((p, batch_size, cfg.encoder_seq,
+                                           cfg.num_kv_heads, cfg.head_dim),
+                                          dt)
+                    ent["xv"] = jnp.zeros_like(ent["xk"])
+                cache[key] = ent
+            elif mixer == "mamba":
+                one = ssm_mod.init_ssm_cache(cfg, batch_size, dt)
+                cache[key] = jax.tree.map(
+                    lambda t: jnp.zeros((p,) + t.shape, t.dtype), one)
+        return cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens: (B, 1) int32; pos: scalar int32 (current write index)."""
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(self.adtype) * (cfg.d_model ** 0.5)
+        x, aux, new_cache = self._stack_forward(
+            params, x, mode="decode", cache=cache, pos=pos)
+        h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._lm_logits_chunk(params, h)
+        return logits[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention decode helpers (whisper)
+# ---------------------------------------------------------------------------
+def _cross_kv(p, enc_out, cfg):
+    b, se, _ = enc_out.shape
+    k = jnp.einsum("...d,df->...f", enc_out, p["xwk"]).reshape(
+        b, se, cfg.num_kv_heads, cfg.head_dim)
+    v = jnp.einsum("...d,df->...f", enc_out, p["xwv"]).reshape(
+        b, se, cfg.num_kv_heads, cfg.head_dim)
+    return {"xk": k, "xv": v}
+
+
+def _cross_decode(p, x, cache_ent, cfg):
+    b = x.shape[0]
+    q = jnp.einsum("...d,df->...f", x, p["xwq"]).reshape(
+        b, 1, cfg.num_heads, cfg.head_dim)
+    qg = q.reshape(b, 1, cfg.num_kv_heads,
+                   cfg.num_heads // cfg.num_kv_heads, cfg.head_dim)
+    scale = cfg.head_dim ** -0.5
+    scores = jnp.einsum("bckgd,bskd->bkgcs", qg, cache_ent["xk"],
+                        preferred_element_type=jnp.float32) * scale
+    pr = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgcs,bskd->bckgd", pr.astype(cache_ent["xv"].dtype),
+                   cache_ent["xv"])
+    o = o.reshape(b, 1, cfg.q_dim)
+    return jnp.einsum("...f,fd->...d", o, p["xwo"])
+
+
+def build(cfg: ModelConfig) -> LM:
+    return LM(cfg)

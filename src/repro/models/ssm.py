@@ -1,0 +1,224 @@
+"""Mamba-2 SSD (state-space duality) mixer — chunked-scan training/prefill
+and O(1)-state decode.  [arXiv:2405.21060]
+
+Projections are stored separately (wz/wx/wb/wc/wdt) rather than as one fused
+in_proj so each output dim shards cleanly over the "model" axis (tensor
+parallelism); the SSD head dimension is sharded over "model" as well, which
+bounds the per-chunk (B, nh, L, L) decay tensor on large hybrids (Jamba).
+
+All SSD arithmetic runs in float32 (long cumulative products), cast back to
+the activation dtype at the block boundary.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm, shard
+
+
+def ssm_init(key, cfg, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    nh = di // s.head_dim
+    gn = s.n_groups * s.d_state
+    ks = jax.random.split(key, 9)
+    p = {
+        "wz": dense_init(ks[0], d, di, dtype),
+        "wx": dense_init(ks[1], d, di, dtype),
+        "wb": dense_init(ks[2], d, gn, dtype),
+        "wc": dense_init(ks[3], d, gn, dtype),
+        "wdt": dense_init(ks[4], d, nh, dtype),
+        "conv_x": (jax.random.normal(ks[5], (s.conv_width, di)) * 0.1
+                   ).astype(dtype),
+        "conv_b": (jax.random.normal(ks[6], (s.conv_width, gn)) * 0.1
+                   ).astype(dtype),
+        "conv_c": (jax.random.normal(ks[7], (s.conv_width, gn)) * 0.1
+                   ).astype(dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "gate_norm": jnp.ones((di,), dtype),
+        "wo": dense_init(ks[8], di, d, dtype),
+    }
+    return p
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv. x: (B, S, C); w: (W, C)."""
+    width = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        shift = width - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xi * w[i]
+    return out
+
+
+def _heads_of(cfg):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    return di // s.head_dim
+
+
+def _ssd_chunk(carry, inp, nh_groups):
+    """One SSD chunk step.  carry: h (B, nh, hd, N) f32."""
+    h = carry
+    # (B,L,nh,hd), (B,L,nh) [=dt·A], (B,L,G,N), (B,L,G,N), (B,L,nh) [=dt]
+    xc, a_dt, bc, cc, dt_j = inp
+    rep = nh_groups
+    bc = jnp.repeat(bc, rep, axis=2)      # (B,L,nh,N)
+    cc = jnp.repeat(cc, rep, axis=2)
+    cum = jnp.cumsum(a_dt, axis=1)         # (B,L,nh) inclusive
+    l = xc.shape[1]
+    # decay[i, j] = exp(cum_i - cum_j) for j <= i.  Mask BEFORE exp: masked
+    # (i < j) entries have diff > 0 and would overflow, poisoning the
+    # backward pass through where() with inf·0 = NaN.
+    diff = cum[:, :, None, :] - cum[:, None, :, :]     # (B, L_i, L_j, nh)
+    mask = (jnp.arange(l)[:, None] >= jnp.arange(l)[None, :])[None, :, :,
+                                                              None]
+    decay = jnp.exp(jnp.where(mask, diff, -1e30))
+    scores = jnp.einsum("blhn,bmhn->blmh", cc, bc) * decay * dt_j[:, None]
+    y_intra = jnp.einsum("blmh,bmhp->blhp", scores, xc)
+    y_inter = jnp.einsum("blhn,bhpn->blhp", cc, h) * jnp.exp(cum)[..., None]
+    # chunk-final state
+    decay_to_end = jnp.exp(cum[:, -1:, :] - cum)       # (B,L,nh)
+    dbx = jnp.einsum("bmhn,bmhp,bmh->bhpn", bc, xc, dt_j * decay_to_end)
+    h_new = h * jnp.exp(cum[:, -1])[:, :, None, None] + dbx
+    return h_new, y_intra + y_inter
+
+
+def ssd_scan(x, dt, b, c, a, chunk, h0=None):
+    """Full-sequence SSD.
+
+    x: (B,S,nh,hd) f32; dt: (B,S,nh) f32 (post-softplus); b,c: (B,S,G,N) f32;
+    a: (nh,) f32 negative.  Returns (y, h_final).
+    """
+    bsz, s, nh, hd = x.shape
+    g = b.shape[2]
+    n = b.shape[3]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        # zero-dt padding: exp(0)=1 decay and zero input, so the padded
+        # steps neither move the state nor contribute output.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    s_pad = s + pad
+    nc = s_pad // chunk
+    rs = lambda t: jnp.moveaxis(
+        t.reshape((bsz, nc, chunk) + t.shape[2:]), 1, 0)
+    xs = (rs(x), rs(dt * a), rs(b), rs(c), rs(dt))
+    if h0 is None:
+        h0 = jnp.zeros((bsz, nh, hd, n), jnp.float32)
+
+    def body(h, inp):
+        return _ssd_chunk(h, inp, nh // g)
+
+    h_fin, ys = jax.lax.scan(body, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s_pad, nh, hd)[:, :s]
+    return y, h_fin
+
+
+def ssm_forward(p, x, cfg, *, return_state=False):
+    """Full-sequence Mamba-2 block.  x: (B, S, D)."""
+    s = cfg.ssm
+    bsz, seq, d = x.shape
+    nh = _heads_of(cfg)
+    z = jnp.einsum("...d,df->...f", x, p["wz"])
+    xi = jnp.einsum("...d,df->...f", x, p["wx"])
+    bi = jnp.einsum("...d,df->...f", x, p["wb"])
+    ci = jnp.einsum("...d,df->...f", x, p["wc"])
+    dti = jnp.einsum("...d,df->...f", x, p["wdt"])
+    xi = jax.nn.silu(_causal_conv(xi, p["conv_x"]))
+    bi = jax.nn.silu(_causal_conv(bi, p["conv_b"]))
+    ci = jax.nn.silu(_causal_conv(ci, p["conv_c"]))
+    xi = shard(xi, "dp", None, "tp")
+
+    xh = xi.reshape(bsz, seq, nh, s.head_dim).astype(jnp.float32)
+    bg = bi.reshape(bsz, seq, s.n_groups, s.d_state).astype(jnp.float32)
+    cg = ci.reshape(bsz, seq, s.n_groups, s.d_state).astype(jnp.float32)
+    dt = jax.nn.softplus(dti.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+
+    y, h_fin = ssd_scan(xh, dt, bg, cg, a, s.chunk_size)
+    y = y + xh * p["d_skip"][:, None]
+    y = y.reshape(bsz, seq, nh * s.head_dim).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("...f,fd->...d", y, p["wo"])
+    if return_state:
+        # conv tail states for decode handoff: last (W-1) inputs pre-conv
+        return out, (h_fin, _conv_tail(x, p, cfg))
+    return out
+
+
+def _conv_tail(x, p, cfg):
+    w = cfg.ssm.conv_width
+    xi = jnp.einsum("...d,df->...f", x, p["wx"])
+    bi = jnp.einsum("...d,df->...f", x, p["wb"])
+    ci = jnp.einsum("...d,df->...f", x, p["wc"])
+    tail = lambda t: t[:, -(w - 1):, :]
+    return (tail(xi), tail(bi), tail(ci))
+
+
+def init_ssm_cache(cfg, batch, dtype=jnp.float32):
+    s = cfg.ssm
+    nh = _heads_of(cfg)
+    di = s.expand * cfg.d_model
+    gn = s.n_groups * s.d_state
+    w = s.conv_width
+    return {
+        "h": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+        "conv_x": jnp.zeros((batch, w - 1, di), dtype),
+        "conv_b": jnp.zeros((batch, w - 1, gn), dtype),
+        "conv_c": jnp.zeros((batch, w - 1, gn), dtype),
+    }
+
+
+def ssm_decode(p, x, cfg, cache):
+    """Single-token decode.  x: (B, 1, D); cache from init_ssm_cache.
+
+    Projections use the weight-stationary serve schedule (§Perf B4): with
+    ZeRO-sharded weights and ≤8 tokens/chip, gathering wz/wx/wo per step
+    costs GBs; serve_linear_* moves only activations.
+    """
+    from repro.models.layers import serve_linear_col, serve_linear_row
+    s = cfg.ssm
+    bsz = x.shape[0]
+    nh = _heads_of(cfg)
+    z = serve_linear_col(x, p["wz"])[:, 0]
+    xi = serve_linear_col(x, p["wx"])[:, 0]
+    bi = serve_linear_col(x, p["wb"])[:, 0]
+    ci = serve_linear_col(x, p["wc"])[:, 0]
+    dti = serve_linear_col(x, p["wdt"])[:, 0]
+
+    def conv_step(state, cur, w):
+        # state: (B, W-1, C) previous raw inputs; cur: (B, C)
+        hist = jnp.concatenate([state, cur[:, None]], axis=1)  # (B, W, C)
+        out = jnp.einsum("bwc,wc->bc", hist.astype(jnp.float32),
+                         w.astype(jnp.float32))
+        return hist[:, 1:], jax.nn.silu(out)
+
+    new_cx, xc = conv_step(cache["conv_x"], xi, p["conv_x"])
+    new_cb, bc = conv_step(cache["conv_b"], bi, p["conv_b"])
+    new_cc, cc = conv_step(cache["conv_c"], ci, p["conv_c"])
+
+    xh = xc.reshape(bsz, nh, s.head_dim)
+    bg = jnp.repeat(bc.reshape(bsz, s.n_groups, s.d_state),
+                    nh // s.n_groups, axis=1)          # (B, nh, N)
+    cg = jnp.repeat(cc.reshape(bsz, s.n_groups, s.d_state),
+                    nh // s.n_groups, axis=1)
+    dt = jax.nn.softplus(dti.astype(jnp.float32) + p["dt_bias"])  # (B, nh)
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt * a)                               # (B, nh)
+    h = cache["h"] * da[:, :, None, None] + jnp.einsum(
+        "bhn,bhp,bh->bhpn", bg, xh, dt)
+    y = jnp.einsum("bhn,bhpn->bhp", cg, h) + xh * p["d_skip"][:, None]
+    y = y.reshape(bsz, nh * s.head_dim).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = serve_linear_row(y[:, None], p["wo"])
+    return out, {"h": h, "conv_x": new_cx, "conv_b": new_cb,
+                 "conv_c": new_cc}

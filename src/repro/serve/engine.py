@@ -1,0 +1,76 @@
+"""Batched serving engine: prefill + greedy/temperature decode loop.
+
+Covers the three inference shapes:
+  prefill_32k  → ``engine.prefill``      (full-sequence forward, cache out)
+  decode_32k   → ``engine.decode_step``  (batch-sharded KV)
+  long_500k    → ``engine.decode_step`` with ``shard_kv_seq=True``
+                 (sequence-sharded KV + LSE-combining attention)
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import sharding as sh
+from repro.models import layers as L
+
+
+class ServeEngine:
+    def __init__(self, lm, params, max_len, mesh=None, shard_kv_seq=False):
+        self.lm = lm
+        self.params = params
+        self.max_len = max_len
+        self.mesh = mesh
+        self.shard_kv_seq = shard_kv_seq
+        self._prefill = jax.jit(
+            lambda p, b: lm.prefill(p, b, max_len))
+        self._decode = jax.jit(lm.decode_step)
+
+    def _ctx(self):
+        stack = contextlib.ExitStack()
+        if self.mesh is not None:
+            dp = (("pod", "data") if "pod" in self.mesh.axis_names
+                  else ("data",))
+            stack.enter_context(L.mesh_context(
+                self.mesh, dp_axes=dp, seq_shard_kv=self.shard_kv_seq))
+            stack.enter_context(self.mesh)
+        return stack
+
+    def prefill(self, batch):
+        with self._ctx():
+            logits, cache = self._prefill(self.params, batch)
+        return logits, cache
+
+    def decode_step(self, cache, tokens, pos):
+        with self._ctx():
+            return self._decode(self.params, cache, tokens, pos)
+
+    def generate(self, batch, steps, temperature=0.0, rng=None):
+        """Greedy (or sampled) generation after a prompt prefill.
+
+        Returns (B, steps) generated token ids.
+        """
+        prompt_len = batch["inputs"].shape[1]
+        prefix = self.lm.cfg.vision_tokens
+        logits, cache = self.prefill(batch)
+        toks = []
+        rng = rng if rng is not None else jax.random.key(0)
+        tok = self._pick(logits, temperature, rng)
+        toks.append(tok)
+        for i in range(steps - 1):
+            pos = prefix + prompt_len + i
+            logits, cache = self.decode_step(
+                cache, tok[:, None], jnp.int32(pos))
+            rng, sub = jax.random.split(rng)
+            tok = self._pick(logits, temperature, sub)
+            toks.append(tok)
+        return jnp.stack(toks, axis=1)
+
+    @staticmethod
+    def _pick(logits, temperature, rng):
+        if temperature == 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(rng, logits / temperature,
+                                      axis=-1).astype(jnp.int32)

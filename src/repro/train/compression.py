@@ -1,0 +1,56 @@
+"""Gradient compression: int8 quantized all-reduce with error feedback.
+
+For cross-pod data parallelism the gradient all-reduce crosses the slow DCI
+links; 4× compression (fp32→int8, per-tensor scale) cuts that traffic.
+Error feedback (residual carried to the next step) keeps convergence —
+the standard EF-SGD/1-bit-Adam recipe.
+
+The quantize/dequantize pair is pure and unit-tested; ``compressed_psum``
+wires it through a shard_map all-reduce over a named axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x):
+    """Per-tensor symmetric int8.  Returns (q, scale)."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(g, residual):
+    """Quantize (g + residual); return (q, scale, new_residual)."""
+    target = g.astype(jnp.float32) + residual
+    q, scale = quantize_int8(target)
+    new_residual = target - dequantize_int8(q, scale)
+    return q, scale, new_residual
+
+
+def compressed_psum(g, axis_name):
+    """Quantized all-reduce of one tensor inside shard_map/pmap context.
+
+    int8 payload is psum'd in int32 (sums of ≤ world int8s fit easily),
+    scales are psum'd in fp32; dequantized mean-of-quantized equals the sum
+    of per-device dequantized tensors.
+    """
+    q, scale = quantize_int8(g)
+    # Per-device scales differ, so the int payloads are not directly
+    # summable; normalize every shard to the global max scale first (one
+    # scalar pmax), then psum the int8 payloads in int32.
+    smax = jax.lax.pmax(scale, axis_name)
+    q2 = jnp.clip(jnp.round(dequantize_int8(q, scale) / smax), -127,
+                  127).astype(jnp.int32)
+    q2sum = jax.lax.psum(q2, axis_name)
+    return q2sum.astype(jnp.float32) * smax
+
+
+def tree_compressed_psum(grads, axis_name):
+    return jax.tree.map(lambda g: compressed_psum(g, axis_name), grads)

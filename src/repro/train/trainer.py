@@ -1,0 +1,137 @@
+"""Training loop: jit'd step with donation, checkpoint/restart, logging.
+
+Fault-tolerance contract (exercised by tests/test_trainer.py):
+  * state = (params, opt_state) checkpointed every ``ckpt_every`` steps
+    (async, atomic — train/checkpoint.py);
+  * on construction the Trainer restores the newest checkpoint if one
+    exists and resumes from that step;
+  * the data pipeline is a pure function of step (data/pipeline.py), so a
+    restart replays the exact schedule — bitwise-identical resumption;
+  * restore may target a different mesh than the save (elastic re-scale) —
+    checkpoints are mesh-agnostic host arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+
+from repro.train import checkpoint as ckpt_lib
+from repro.train import optimizer as opt_lib
+from repro.launch import sharding as sh
+from repro.models import layers as L
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_dir: str | None = None
+    ckpt_every: int = 50
+    ckpt_async: bool = True
+    log_every: int = 10
+    opt: opt_lib.OptimizerConfig = dataclasses.field(
+        default_factory=opt_lib.OptimizerConfig)
+
+
+def make_train_step(lm, opt_cfg):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lm.loss, has_aux=True)(params, batch)
+        params, opt_state, om = opt_lib.update(opt_cfg, grads, opt_state,
+                                               params)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+    return train_step
+
+
+class Trainer:
+    def __init__(self, lm, data, cfg: TrainConfig, mesh=None, rng=None):
+        self.lm = lm
+        self.data = data
+        self.cfg = cfg
+        self.mesh = mesh
+        rng = rng if rng is not None else jax.random.key(0)
+
+        step_fn = make_train_step(lm, cfg.opt)
+        if mesh is not None:
+            pspecs = sh.param_specs(jax.eval_shape(lm.init, rng))
+            pshard = sh.to_shardings(mesh, pspecs)
+            oshard = sh.to_shardings(mesh, {
+                "m": pspecs, "v": pspecs,
+                "step": jax.sharding.PartitionSpec()})
+            bshard = sh.to_shardings(mesh, sh.batch_specs(lm.cfg, mesh))
+            self._shardings = (pshard, oshard)
+            with mesh:
+                self.params = jax.jit(lm.init, out_shardings=pshard)(rng)
+                self.opt_state = jax.jit(
+                    lambda p: opt_lib.init(cfg.opt, p),
+                    out_shardings=oshard)(self.params)
+                self._step_fn = jax.jit(
+                    step_fn,
+                    in_shardings=(pshard, oshard, bshard),
+                    out_shardings=(pshard, oshard, None),
+                    donate_argnums=(0, 1))
+        else:
+            self._shardings = None
+            self.params = jax.jit(lm.init)(rng)
+            self.opt_state = opt_lib.init(cfg.opt, self.params)
+            self._step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+
+        self.step = 0
+        self.history: list[dict] = []
+        if cfg.ckpt_dir and ckpt_lib.latest_step(cfg.ckpt_dir) is not None:
+            self.restore()
+
+    # -- checkpoint/restart ------------------------------------------------
+    def save(self):
+        if not self.cfg.ckpt_dir:
+            return
+        tree = {"params": self.params, "opt": self.opt_state,
+                "meta": {"step": self.step}}
+        if self.cfg.ckpt_async:
+            ckpt_lib.save_async(self.cfg.ckpt_dir, self.step, tree)
+        else:
+            ckpt_lib.save(self.cfg.ckpt_dir, self.step, tree)
+
+    def restore(self, step=None):
+        target = {"params": self.params, "opt": self.opt_state,
+                  "meta": {"step": 0}}
+        tree, _ = ckpt_lib.restore(self.cfg.ckpt_dir, target, step)
+        if self._shardings:
+            tree["params"] = jax.tree.map(
+                jax.device_put, tree["params"], self._shardings[0])
+            tree["opt"] = jax.tree.map(
+                jax.device_put, tree["opt"], self._shardings[1])
+        self.params = tree["params"]
+        self.opt_state = tree["opt"]
+        self.step = int(tree["meta"]["step"])
+        return self.step
+
+    # -- loop ---------------------------------------------------------------
+    def run(self, steps=None, on_step=None):
+        import contextlib
+        steps = steps if steps is not None else self.cfg.steps
+        with contextlib.ExitStack() as stack:
+            if self.mesh is not None:
+                dp = (("pod", "data") if "pod" in self.mesh.axis_names
+                      else ("data",))
+                stack.enter_context(L.mesh_context(self.mesh, dp_axes=dp))
+                stack.enter_context(self.mesh)
+            while self.step < steps:
+                batch = self.data(self.step)
+                self.params, self.opt_state, metrics = self._step_fn(
+                    self.params, self.opt_state, batch)
+                self.step += 1
+                if (self.step % self.cfg.log_every == 0
+                        or self.step == steps):
+                    m = {k: float(v) for k, v in metrics.items()}
+                    m["step"] = self.step
+                    m["time"] = time.time()
+                    self.history.append(m)
+                if self.cfg.ckpt_dir and \
+                   self.step % self.cfg.ckpt_every == 0:
+                    self.save()
+                if on_step is not None:
+                    on_step(self)
+        ckpt_lib.wait_pending()
+        return self.history

@@ -1,0 +1,164 @@
+"""Serpens format: roundtrip, invariants, and hypothesis property tests."""
+import collections
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import format as F
+
+
+def rand_coo(m, k, nnz, seed=0, dupes=False):
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, m, nnz)
+    cols = rng.integers(0, k, nnz)
+    vals = rng.normal(size=nnz).astype(np.float32)
+    if not dupes:
+        key = rows.astype(np.int64) * k + cols
+        _, idx = np.unique(key, return_index=True)
+        rows, cols, vals = rows[idx], cols[idx], vals[idx]
+    return rows, cols, vals
+
+
+CFG = F.SerpensConfig(segment_width=64, lanes=8, sublanes=4, raw_window=4)
+
+
+def dense_of(rows, cols, vals, shape):
+    out = np.zeros(shape, np.float32)
+    np.add.at(out, (rows, cols), vals)
+    return out
+
+
+class TestRoundtrip:
+    @pytest.mark.parametrize("m,k,nnz", [(50, 70, 300), (8, 8, 8),
+                                         (200, 30, 900), (1, 1, 1)])
+    def test_decode_recovers_coo(self, m, k, nnz):
+        rows, cols, vals = rand_coo(m, k, nnz, seed=m + k)
+        sm = F.encode(rows, cols, vals, (m, k), CFG)
+        r2, c2, v2 = F.decode_to_coo(sm)
+        assert dense_of(r2, c2, v2, (m, k)) == pytest.approx(
+            dense_of(rows, cols, vals, (m, k)))
+
+    def test_duplicates_preserved(self):
+        rows = np.array([3, 3, 3, 3]); cols = np.array([5, 5, 5, 5])
+        vals = np.array([1., 2., 3., 4.], np.float32)
+        sm = F.encode(rows, cols, vals, (10, 10), CFG)
+        r2, c2, v2 = F.decode_to_coo(sm)
+        assert len(r2) == 4 and v2.sum() == 10.0
+        F.check_invariants(sm)  # dupes must still be RAW-window separated
+
+    def test_empty_matrix(self):
+        sm = F.encode(np.array([], np.int64), np.array([], np.int64),
+                      np.array([], np.float32), (16, 16), CFG)
+        r2, c2, v2 = F.decode_to_coo(sm)
+        assert len(r2) == 0
+        F.check_invariants(sm)
+
+    def test_row_capacity_guard(self):
+        cfg = F.SerpensConfig(segment_width=64, lanes=2, sublanes=4)
+        big_m = 2 * ((1 << 16) - 1) + 1
+        with pytest.raises(ValueError, match="row capacity"):
+            F.encode(np.array([big_m - 1]), np.array([0]),
+                     np.array([1.0], np.float32), (big_m, 4), cfg)
+
+
+class TestInvariants:
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(1, 120), st.integers(1, 150), st.integers(0, 400),
+           st.integers(0, 10_000))
+    def test_property_roundtrip_and_raw(self, m, k, nnz, seed):
+        rows, cols, vals = rand_coo(m, k, max(nnz, 0) or 1, seed, dupes=True)
+        cfg = F.SerpensConfig(segment_width=32, lanes=4, sublanes=4,
+                              raw_window=4)
+        sm = F.encode(rows, cols, vals, (m, k), cfg)
+        F.check_invariants(sm)
+        r2, c2, v2 = F.decode_to_coo(sm)
+        np.testing.assert_allclose(dense_of(r2, c2, v2, (m, k)),
+                                   dense_of(rows, cols, vals, (m, k)),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_lane_ownership(self):
+        rows, cols, vals = rand_coo(100, 100, 500, seed=2)
+        sm = F.encode(rows, cols, vals, (100, 100), CFG)
+        r2, _, _ = F.decode_to_coo(sm)
+        idx = sm.idx.reshape(-1, CFG.lanes)
+        live = idx != F.SENTINEL
+        lanes = np.broadcast_to(np.arange(CFG.lanes), idx.shape)[live]
+        assert np.all(r2 % CFG.lanes == lanes)
+
+    def test_segment_monotone(self):
+        rows, cols, vals = rand_coo(60, 500, 2000, seed=3)
+        sm = F.encode(rows, cols, vals, (60, 500), CFG)
+        assert np.all(np.diff(sm.seg_ids) >= 0)
+
+    def test_hot_row_padding(self):
+        """One row with many entries in one segment forces RAW padding."""
+        n = 64
+        rows = np.zeros(n, np.int64)
+        cols = np.arange(n, dtype=np.int64)  # all in segment 0 (W=64)
+        vals = np.ones(n, np.float32)
+        sm = F.encode(rows, cols, vals, (8, 64), CFG)
+        F.check_invariants(sm)
+        # row 0 owns lane 0; 64 conflicting entries with window 4 need
+        # ≥ 64*4 slots in that lane
+        assert sm.idx.reshape(-1, CFG.lanes).shape[0] >= 64 * 4 - 3
+
+
+class TestStats:
+    def test_padding_ratio_and_stream_bytes(self):
+        rows, cols, vals = rand_coo(128, 128, 512, seed=4)
+        sm = F.encode(rows, cols, vals, (128, 128), CFG)
+        assert sm.stream_bytes == sm.idx.size * 8
+        assert 0.0 <= sm.padding_ratio < 1.0
+        assert sm.idx.size >= sm.nnz
+
+
+class TestSpill:
+    """Beyond-paper hot-row spill + lane balancing (§Perf C3/C4)."""
+
+    def test_spill_roundtrip_exact(self):
+        rows = np.concatenate([np.zeros(200, np.int64),
+                               np.arange(100, dtype=np.int64)])
+        cols = np.concatenate([np.arange(200, dtype=np.int64),
+                               np.arange(100, dtype=np.int64)])
+        vals = np.random.default_rng(0).normal(size=300).astype(np.float32)
+        cfg = F.SerpensConfig(segment_width=64, lanes=8, sublanes=4,
+                              raw_window=2, spill_hot_rows=True,
+                              lane_balance=1.25)
+        sm = F.encode(rows, cols, vals, (128, 256), cfg)
+        F.check_invariants(sm)
+        assert sm.n_aux > 0   # the hot row must spill
+        r2, c2, v2 = F.decode_to_coo(sm)
+        np.testing.assert_allclose(dense_of(r2, c2, v2, (128, 256)),
+                                   dense_of(rows, cols, vals, (128, 256)),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_spill_reduces_padding(self):
+        rng = np.random.default_rng(1)
+        # zipf-ish rows: heavy head
+        rows = (rng.zipf(1.3, 4000) % 64).astype(np.int64)
+        cols = rng.integers(0, 256, 4000)
+        vals = rng.normal(size=4000).astype(np.float32)
+        base = F.SerpensConfig(segment_width=64, lanes=8, sublanes=4,
+                               raw_window=4)
+        opt = F.SerpensConfig(segment_width=64, lanes=8, sublanes=4,
+                              raw_window=2, spill_hot_rows=True,
+                              lane_balance=1.25)
+        p0 = F.encode(rows, cols, vals, (64, 256), base).padding_ratio
+        p1 = F.encode(rows, cols, vals, (64, 256), opt).padding_ratio
+        assert p1 < p0
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 100), st.integers(1, 120), st.integers(1, 400),
+           st.integers(0, 9999))
+    def test_property_spill_preserves_matrix(self, m, k, nnz, seed):
+        rows, cols, vals = rand_coo(m, k, nnz, seed, dupes=True)
+        cfg = F.SerpensConfig(segment_width=32, lanes=4, sublanes=4,
+                              raw_window=2, spill_hot_rows=True,
+                              lane_balance=1.2)
+        sm = F.encode(rows, cols, vals, (m, k), cfg)
+        F.check_invariants(sm)
+        r2, c2, v2 = F.decode_to_coo(sm)
+        np.testing.assert_allclose(dense_of(r2, c2, v2, (m, k)),
+                                   dense_of(rows, cols, vals, (m, k)),
+                                   rtol=1e-5, atol=1e-5)

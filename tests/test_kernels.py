@@ -1,0 +1,214 @@
+"""Pallas kernel vs pure-jnp oracle: shape/density/config sweeps.
+
+Every sweep asserts allclose against ref.py (the COO oracle) — the
+requirement for kernels/ in this framework.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import format as F
+from repro.core.spmv import SerpensSpMV, from_dense
+from repro.kernels import ops
+from repro.kernels.ref import spmv_coo_ref, spmm_coo_ref, spmv_dense_ref
+
+
+def build(m, k, nnz, cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, m, nnz)
+    cols = rng.integers(0, k, nnz)
+    vals = rng.normal(size=nnz).astype(np.float32)
+    x = rng.normal(size=k).astype(np.float32)
+    return rows, cols, vals, x
+
+
+CFGS = [
+    F.SerpensConfig(segment_width=64, lanes=8, sublanes=4, raw_window=4),
+    F.SerpensConfig(segment_width=128, lanes=16, sublanes=8, raw_window=8,
+                    tiles_per_chunk=2),
+    F.SerpensConfig(segment_width=8192, lanes=128, sublanes=8,
+                    raw_window=8),  # paper geometry
+]
+
+
+@pytest.mark.parametrize("cfg", CFGS)
+@pytest.mark.parametrize("m,k,nnz", [(100, 130, 700), (37, 211, 900),
+                                     (256, 64, 64), (512, 4096, 3000)])
+def test_pallas_matches_oracle(cfg, m, k, nnz):
+    rows, cols, vals, x = build(m, k, nnz, cfg, seed=m + nnz)
+    op = SerpensSpMV(rows, cols, vals, (m, k), cfg)
+    ref = spmv_coo_ref(jnp.asarray(rows), jnp.asarray(cols),
+                       jnp.asarray(vals), jnp.asarray(x), m)
+    got = op.matvec(x, backend="pallas")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("cfg", CFGS[:2])
+def test_xla_stream_matches_oracle(cfg):
+    rows, cols, vals, x = build(90, 300, 1200, cfg, seed=5)
+    op = SerpensSpMV(rows, cols, vals, (90, 300), cfg)
+    ref = spmv_coo_ref(jnp.asarray(rows), jnp.asarray(cols),
+                       jnp.asarray(vals), jnp.asarray(x), 90)
+    got = op.matvec(x, backend="xla")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("density", [0.001, 0.01, 0.1, 0.5])
+def test_density_sweep(density):
+    m = k = 128
+    nnz = max(1, int(m * k * density))
+    cfg = CFGS[0]
+    rows, cols, vals, x = build(m, k, nnz, cfg, seed=int(density * 1e4))
+    op = SerpensSpMV(rows, cols, vals, (m, k), cfg)
+    ref = spmv_coo_ref(jnp.asarray(rows), jnp.asarray(cols),
+                       jnp.asarray(vals), jnp.asarray(x), m)
+    for backend in ("pallas", "xla"):
+        got = op.matvec(x, backend=backend)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("xdtype", [jnp.float32, jnp.bfloat16])
+def test_x_dtype(xdtype):
+    """The engine accepts/casts non-f32 inputs (accumulation stays f32)."""
+    rows, cols, vals, x = build(64, 64, 256, CFGS[0], seed=9)
+    op = SerpensSpMV(rows, cols, vals, (64, 64), CFGS[0])
+    got = op.matvec(jnp.asarray(x, xdtype), backend="pallas")
+    ref = spmv_coo_ref(jnp.asarray(rows), jnp.asarray(cols),
+                       jnp.asarray(vals),
+                       jnp.asarray(x, xdtype).astype(jnp.float32), 64)
+    tol = 1e-5 if xdtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=tol, atol=tol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 80), st.integers(1, 140), st.integers(1, 500),
+       st.integers(0, 99999))
+def test_property_pallas_vs_dense(m, k, nnz, seed):
+    rng = np.random.default_rng(seed)
+    a = np.zeros((m, k), np.float32)
+    rows = rng.integers(0, m, nnz)
+    cols = rng.integers(0, k, nnz)
+    a[rows, cols] = rng.normal(size=nnz)
+    x = rng.normal(size=k).astype(np.float32)
+    cfg = F.SerpensConfig(segment_width=32, lanes=4, sublanes=4,
+                          raw_window=4)
+    op = from_dense(a, cfg)
+    ref = spmv_dense_ref(jnp.asarray(a), jnp.asarray(x))
+    got = op.matvec(x, backend="pallas")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_spmm_matches_oracle():
+    rows, cols, vals, _ = build(70, 90, 500, CFGS[0], seed=11)
+    rng = np.random.default_rng(12)
+    xm = rng.normal(size=(90, 6)).astype(np.float32)
+    op = SerpensSpMV(rows, cols, vals, (70, 90), CFGS[0])
+    ref = spmm_coo_ref(jnp.asarray(rows), jnp.asarray(cols),
+                       jnp.asarray(vals), jnp.asarray(xm), 70)
+    got = op.matmat(xm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_alpha_beta_epilogue():
+    rows, cols, vals, x = build(40, 50, 200, CFGS[0], seed=13)
+    y = np.random.default_rng(14).normal(size=40).astype(np.float32)
+    op = SerpensSpMV(rows, cols, vals, (40, 50), CFGS[0])
+    ref = spmv_coo_ref(jnp.asarray(rows), jnp.asarray(cols),
+                       jnp.asarray(vals), jnp.asarray(x), 40,
+                       alpha=-1.5, beta=0.25, y=jnp.asarray(y))
+    got = op(x, alpha=-1.5, beta=0.25, y=y, backend="pallas")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+class TestFlashAttention:
+    """Pallas flash-attention kernel vs pure-jnp oracle (§Perf A6)."""
+
+    @staticmethod
+    def _ref(q, k, v, causal):
+        dh = q.shape[-1]
+        s = jnp.einsum("bckgd,bskd->bkgcs", q, k).astype(jnp.float32) \
+            * dh ** -0.5
+        if causal:
+            m = (jnp.arange(k.shape[1])[None, :]
+                 <= jnp.arange(q.shape[1])[:, None])
+            s = jnp.where(m[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, -1)
+        return jnp.einsum("bkgcs,bskd->bckgd", p.astype(v.dtype), v)
+
+    @pytest.mark.parametrize(
+        "b,s,kv,g,dh,dv,causal,qb,kb",
+        [(2, 64, 2, 3, 16, 16, True, 16, 32),
+         (1, 100, 1, 4, 32, 24, True, 32, 16),   # MLA-style dv != dh
+         (2, 80, 2, 1, 16, 16, False, 16, 32),
+         (1, 33, 2, 2, 8, 8, True, 8, 8)])       # ragged blocks
+    def test_matches_oracle(self, b, s, kv, g, dh, dv, causal, qb, kb):
+        from repro.kernels.flash_attention import flash_attention
+        rng = np.random.default_rng(b * s + dh)
+        q = jnp.asarray(rng.normal(size=(b, s, kv, g, dh)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, s, kv, dh)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, s, kv, dv)), jnp.float32)
+        got = flash_attention(q, k, v, causal=causal, q_block=qb,
+                              kv_block=kb)
+        want = self._ref(q, k, v, causal)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_matches_model_attention(self):
+        """Kernel == the model's chunked_attention (same math)."""
+        from repro.kernels.flash_attention import flash_attention
+        from repro.models.attention import chunked_attention
+        rng = np.random.default_rng(7)
+        q = jnp.asarray(rng.normal(size=(2, 48, 2, 2, 16)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(2, 48, 2, 16)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(2, 48, 2, 16)), jnp.float32)
+        a = flash_attention(q, k, v, causal=True, q_block=16, kv_block=16)
+        b = chunked_attention(q, k, v, causal=True, chunk=16, kv_block=16)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_traffic_model_is_linear_in_seq(self):
+        from repro.kernels.flash_attention import traffic_bytes
+        t1 = traffic_bytes(1, 4096, 4096, 8, 5, 128, 128)
+        t2 = traffic_bytes(1, 8192, 8192, 8, 5, 128, 128)
+        assert t2 < 4.2 * t1   # ~quadratic only via nq·KV re-reads
+
+
+@pytest.mark.parametrize("n", [1, 4, 9])
+def test_spmm_pallas_matches_oracle(n):
+    """Pallas SpMM kernel (multi-vector Serpens) vs COO oracle."""
+    rows, cols, vals, _ = build(80, 150, 600, CFGS[0], seed=21 + n)
+    rng = np.random.default_rng(22)
+    xm = rng.normal(size=(150, n)).astype(np.float32)
+    op = SerpensSpMV(rows, cols, vals, (80, 150), CFGS[0])
+    ref = spmm_coo_ref(jnp.asarray(rows), jnp.asarray(cols),
+                       jnp.asarray(vals), jnp.asarray(xm), 80)
+    got = op.matmat(xm, backend="pallas")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_spmm_pallas_with_spill():
+    rows = np.concatenate([np.zeros(120, np.int64),
+                           np.arange(60, dtype=np.int64)])
+    cols = np.concatenate([np.arange(120, dtype=np.int64) % 64,
+                           np.arange(60, dtype=np.int64)])
+    vals = np.random.default_rng(5).normal(size=180).astype(np.float32)
+    cfg = F.SerpensConfig(segment_width=64, lanes=8, sublanes=4,
+                          raw_window=2, spill_hot_rows=True,
+                          lane_balance=1.2)
+    xm = np.random.default_rng(6).normal(size=(64, 3)).astype(np.float32)
+    op = SerpensSpMV(rows, cols, vals, (64, 64), cfg)
+    ref = spmm_coo_ref(jnp.asarray(rows), jnp.asarray(cols),
+                       jnp.asarray(vals), jnp.asarray(xm), 64)
+    got = op.matmat(xm, backend="pallas")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)

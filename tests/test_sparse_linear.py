@@ -1,0 +1,54 @@
+"""SparseLinear (the paper's sparse-NN-inference application)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.sparse_linear import SparseLinear, magnitude_prune
+
+
+def test_magnitude_prune_density():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(64, 128)).astype(np.float32)
+    for d in (0.05, 0.25, 0.9):
+        wp = magnitude_prune(w, d)
+        got = (wp != 0).mean()
+        assert abs(got - d) < 0.02
+        # kept entries are the largest |w|
+        thresh = np.abs(wp[wp != 0]).min()
+        assert np.abs(w[wp == 0]).max() <= thresh + 1e-7
+
+
+def test_sparse_linear_matches_dense_on_kept_weights():
+    rng = np.random.default_rng(1)
+    w = rng.normal(size=(48, 96)).astype(np.float32)
+    b = rng.normal(size=48).astype(np.float32)
+    sl = SparseLinear.from_dense(w, density=0.3, bias=b)
+    wp = magnitude_prune(w, 0.3)
+    x = rng.normal(size=(5, 96)).astype(np.float32)
+    got = np.asarray(sl(x))
+    np.testing.assert_allclose(got, x @ wp.T + b, rtol=2e-4, atol=2e-4)
+
+
+def test_sparse_linear_vector_input():
+    rng = np.random.default_rng(2)
+    w = rng.normal(size=(32, 64)).astype(np.float32)
+    sl = SparseLinear.from_dense(w, density=0.5)
+    x = rng.normal(size=64).astype(np.float32)
+    wp = magnitude_prune(w, 0.5)
+    np.testing.assert_allclose(np.asarray(sl(x)), wp @ x,
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rejects_bad_rank():
+    sl = SparseLinear.from_dense(np.eye(8, dtype=np.float32), 1.0)
+    with pytest.raises(ValueError):
+        sl(jnp.zeros((2, 2, 8)))
+
+
+def test_full_density_exact():
+    rng = np.random.default_rng(3)
+    w = rng.normal(size=(16, 16)).astype(np.float32)
+    sl = SparseLinear.from_dense(w, density=1.0)
+    x = rng.normal(size=16).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(sl(x)), w @ x, rtol=1e-5,
+                               atol=1e-5)
