@@ -9,7 +9,7 @@ import traceback
 def main() -> None:
     from benchmarks import (table3_large_matrices, fig3_suitesparse,
                             table5_scaling, table4_resources, roofline,
-                            serpens_kernel)
+                            serpens_kernel, serving)
     print("name,us_per_call,derived")
     suites = [
         ("table3", table3_large_matrices.run),
@@ -18,6 +18,7 @@ def main() -> None:
         ("table4", table4_resources.run),
         ("serpens_kernel", serpens_kernel.run),
         ("roofline", roofline.run),
+        ("serving", serving.run),
     ]
     failures = 0
     for name, fn in suites:

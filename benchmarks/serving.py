@@ -1,0 +1,59 @@
+"""Serving benchmark: requests/s and A-stream amortization vs bucket size.
+
+    PYTHONPATH=src:. python benchmarks/serving.py
+
+Fixes a registry-resident power-law matrix and replays a burst of SpMV
+requests through ``SpMVService`` at increasing micro-batch buckets.  The
+paper's economics predict stream-bytes/vector ∝ 1/N (one A-stream amortized
+over N vectors); requests/s should rise until FLOPs/padding dominate.
+
+Emits the standard ``name,us_per_call,derived`` CSV rows.
+"""
+import numpy as np
+
+from benchmarks.common import time_call, emit
+from repro.core import format as F
+from repro.core.registry import MatrixRegistry
+from repro.data import matrices as M
+from repro.serve.spmv_service import SpMVService
+
+N_VERTICES = 20_000
+NNZ = 200_000
+BURST = 32                      # requests per replay
+BUCKETS = (1, 2, 4, 8, 16)
+
+
+def run():
+    rows, cols, vals = M.power_law_graph(N_VERTICES, NNZ, seed=7)
+    cfg = F.SerpensConfig(segment_width=8192, lanes=128)
+    registry = MatrixRegistry(config=cfg, backend="xla")
+    mid = registry.put(rows, cols, vals, (N_VERTICES, N_VERTICES))
+    op = registry.get(mid)
+    rng = np.random.default_rng(1)
+    xs = rng.normal(size=(BURST, N_VERTICES)).astype(np.float32)
+    emit("serving/encode_s", registry.stats.encode_seconds * 1e6,
+         f"stream_bytes={op.stream_bytes}")
+
+    prev_bpv = float("inf")
+    for bucket in BUCKETS:
+        svc = SpMVService(registry, max_bucket=bucket, backend="xla")
+
+        def replay():
+            for x in xs:
+                svc.submit(mid, x)
+            return [r.y for r in svc.flush().values()]
+
+        sec = time_call(replay, warmup=1, iters=3)
+        rps = BURST / sec
+        bpv = svc.stats.amortized_bytes_per_vector
+        emit(f"serving/bucket{bucket:02d}", sec / BURST * 1e6,
+             f"req_per_s={rps:.1f};stream_bytes_per_vec={bpv:.0f}")
+        assert bpv <= prev_bpv + 1e-6, (
+            f"amortization must not regress with bucket size: "
+            f"{bpv} > {prev_bpv}")
+        prev_bpv = bpv
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

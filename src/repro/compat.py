@@ -1,0 +1,36 @@
+"""Version-compat shims for the jax API surface this repo targets.
+
+The codebase is written against the current jax API (``jax.shard_map``,
+``jax.sharding.AxisType``); older jax releases (< 0.4.38) ship the same
+functionality under experimental/implicit spellings.  Everything that needs
+one of the moved symbols imports it from here.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:                      # jax < 0.4.38
+    from jax.experimental.shard_map import shard_map  # type: ignore # noqa
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict on every jax version.
+
+    Older jaxlib (< 0.4.37) returns a one-element list of dicts; current
+    jax returns the dict directly.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with Auto axis types where the API has them."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:                   # older jax: implicit Auto
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                         axis_types=(axis_type.Auto,) * len(axis_names))

@@ -35,8 +35,11 @@ def reduced_config(arch_id: str) -> ModelConfig:
     """Tiny same-family sibling for CPU smoke tests."""
     cfg = get_config(arch_id)
     period = len(cfg.layout)
+    # One full layout period covers every mixer type; 2 floors the depth so
+    # inter-layer plumbing is still exercised.  (2×period made the jamba
+    # smoke tests — period 8 — dominate tier-1 runtime at 16 layers.)
     kw = dict(
-        num_layers=2 * period,
+        num_layers=max(2, period),
         d_model=64,
         num_heads=4,
         num_kv_heads=max(1, min(cfg.num_kv_heads, 2)) if cfg.num_kv_heads

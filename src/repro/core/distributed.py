@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import format as sformat
 from repro.kernels import ops
 
@@ -122,7 +123,7 @@ class ShardedSerpensSpMV:
                     segment_width=cfg.segment_width)
                 return acc[None]
 
-            f = jax.shard_map(
+            f = compat.shard_map(
                 body, mesh=self.mesh,
                 in_specs=(P(self.axis), P(self.axis), P(self.axis), P()),
                 out_specs=P(self.axis))
@@ -141,7 +142,7 @@ class ShardedSerpensSpMV:
                     segment_width=cfg.segment_width)
                 return jax.lax.psum(acc, self.axis)
 
-            f = jax.shard_map(
+            f = compat.shard_map(
                 body, mesh=self.mesh,
                 in_specs=(P(self.axis), P(self.axis), P(self.axis),
                           P(self.axis)),

@@ -1,0 +1,228 @@
+"""Content-addressed cache of encoded Serpens matrices — the serving tier's
+matrix store.
+
+The paper's format conversion (``format.encode``) is the expensive host-side
+step: per-lane scheduling over every segment.  A serving system that re-ran it
+per request would be bottlenecked on preprocessing, not on the accelerator.
+``MatrixRegistry`` amortizes it: matrices are keyed by a content hash of their
+COO triples + geometry, encoded exactly once, and the resulting
+:class:`~repro.core.spmv.SerpensSpMV` operator (host stream + device arrays)
+is kept resident until a byte-budget LRU evicts it.
+
+This mirrors the deployment model of HBM SpMV accelerators (Serpens,
+Parravicini et al.'s Top-K SpMV): the sparse matrix is *resident* on the
+device and many vectors stream against it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import threading
+import time
+from collections import OrderedDict
+
+import numpy as np
+
+from repro.core import format as sformat
+from repro.core.spmv import SerpensSpMV
+
+
+def content_key(rows, cols, vals, shape,
+                config: sformat.SerpensConfig) -> str:
+    """Deterministic id for (COO triples, shape, geometry).
+
+    Element *order* is part of the key: duplicates are legal in COO and the
+    stream layout depends on input order, so two orderings are two streams.
+    """
+    h = hashlib.sha256()
+    h.update(repr((tuple(int(s) for s in shape), config)).encode())
+    for arr, dt in ((rows, np.int64), (cols, np.int64), (vals, np.float32)):
+        a = np.ascontiguousarray(np.asarray(arr, dtype=dt))
+        h.update(a.tobytes())
+    return h.hexdigest()[:16]
+
+
+def stream_key(sm: sformat.SerpensMatrix) -> str:
+    """Deterministic id for an already-encoded stream (``put_operator``).
+
+    Keyed on the stream arrays themselves, so it lives in a different id
+    namespace than :func:`content_key` (prefix ``s``): entries adopted via
+    ``put_operator`` dedupe against each other, not against ``put`` entries.
+    """
+    h = hashlib.sha256()
+    h.update(repr((tuple(int(x) for x in sm.shape), sm.config)).encode())
+    for a in (sm.idx, sm.val, sm.seg_ids):
+        h.update(np.ascontiguousarray(a).tobytes())
+    if sm.n_aux:
+        for a in (sm.aux_rows, sm.aux_cols, sm.aux_vals):
+            h.update(np.ascontiguousarray(a).tobytes())
+    return "s" + h.hexdigest()[:15]
+
+
+@dataclasses.dataclass
+class RegistryStats:
+    hits: int = 0
+    misses: int = 0
+    encodes: int = 0
+    evictions: int = 0
+    encode_seconds: float = 0.0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+@dataclasses.dataclass
+class _Entry:
+    op: SerpensSpMV
+    content: str        # content hash — detects reuse of an explicit id
+
+
+class MatrixRegistry:
+    """LRU cache of ready-to-run Serpens operators, bounded by stream bytes.
+
+    ``byte_budget`` caps the sum of ``stream_bytes`` over cached entries
+    (the off-chip footprint of the encoded streams, the quantity the paper's
+    bandwidth model is written in).  When an insert pushes the total over
+    budget, least-recently-used entries are evicted — except the entry being
+    inserted, so a single over-budget matrix still serves (with a warning in
+    the stats via ``over_budget``).
+    """
+
+    def __init__(self, byte_budget: int = 1 << 31,
+                 config: sformat.SerpensConfig = sformat.SerpensConfig(),
+                 backend: str = "auto"):
+        if byte_budget <= 0:
+            raise ValueError("byte_budget must be positive")
+        self.byte_budget = int(byte_budget)
+        self.default_config = config
+        self.default_backend = backend
+        self.stats = RegistryStats()
+        self._entries: "OrderedDict[str, _Entry]" = OrderedDict()
+        self._bytes = 0
+        self._lock = threading.RLock()
+
+    # -- introspection ----------------------------------------------------
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def __contains__(self, matrix_id: str) -> bool:
+        with self._lock:
+            return matrix_id in self._entries
+
+    @property
+    def bytes_in_use(self) -> int:
+        with self._lock:
+            return self._bytes
+
+    @property
+    def over_budget(self) -> bool:
+        with self._lock:
+            return self._bytes > self.byte_budget
+
+    def ids(self) -> list[str]:
+        """Cached ids, least→most recently used."""
+        with self._lock:
+            return list(self._entries)
+
+    # -- core API ---------------------------------------------------------
+    def put(self, rows, cols, vals, shape, *, config=None, backend=None,
+            matrix_id: str | None = None) -> str:
+        """Ensure the matrix is cached; return its id.
+
+        A repeat ``put`` of the same content is a *hit*: the encode does not
+        re-run.  Pass ``matrix_id`` to name the entry explicitly (e.g. a
+        model/layer path); otherwise the content hash is the id.  Re-using
+        an explicit id with *different* content replaces the entry (a miss)
+        rather than silently serving the stale matrix.
+        """
+        cfg = config or self.default_config
+        ck = content_key(rows, cols, vals, shape, cfg)
+        key = matrix_id or ck
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None and entry.content == ck:
+                self.stats.hits += 1
+                self._entries.move_to_end(key)
+                return key
+        # Encode outside the lock — it is the slow part and pure.
+        t0 = time.perf_counter()
+        op = SerpensSpMV(rows, cols, vals, shape, cfg,
+                         backend or self.default_backend)
+        dt = time.perf_counter() - t0
+        with self._lock:
+            self.stats.encode_seconds += dt
+            self.stats.encodes += 1
+            entry = self._entries.get(key)
+            if entry is not None and entry.content == ck:
+                self.stats.hits += 1       # raced with another thread
+                self._entries.move_to_end(key)
+                return key
+            if entry is not None:          # same name, new content: replace
+                del self._entries[key]
+                self._bytes -= entry.op.stream_bytes
+            self.stats.misses += 1
+            self._insert(key, _Entry(op, ck))
+        return key
+
+    def put_operator(self, op: SerpensSpMV,
+                     matrix_id: str | None = None) -> str:
+        """Adopt an already-built operator (counts as a miss, no encode).
+
+        Dedupes against other adopted operators via :func:`stream_key`; an
+        operator whose triples were also ``put`` directly gets its own entry
+        (the COO input order that produced it is unknown here).
+        """
+        ck = stream_key(op.host)
+        key = matrix_id or ck
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None and entry.content == ck:
+                self.stats.hits += 1
+                self._entries.move_to_end(key)
+            else:
+                if entry is not None:
+                    del self._entries[key]
+                    self._bytes -= entry.op.stream_bytes
+                self.stats.misses += 1
+                self._insert(key, _Entry(op, ck))
+        return key
+
+    def get(self, matrix_id: str) -> SerpensSpMV:
+        """Fetch a cached operator (refreshes LRU recency)."""
+        with self._lock:
+            if matrix_id not in self._entries:
+                self.stats.misses += 1
+                raise KeyError(f"matrix {matrix_id!r} not in registry "
+                               f"(cached: {len(self._entries)})")
+            self.stats.hits += 1
+            self._entries.move_to_end(matrix_id)
+            return self._entries[matrix_id].op
+
+    def evict(self, matrix_id: str) -> None:
+        with self._lock:
+            entry = self._entries.pop(matrix_id, None)
+            if entry is not None:
+                self._bytes -= entry.op.stream_bytes
+                self.stats.evictions += 1
+
+    def clear(self) -> None:
+        with self._lock:
+            self.stats.evictions += len(self._entries)
+            self._entries.clear()
+            self._bytes = 0
+
+    # -- internals --------------------------------------------------------
+    def _insert(self, key: str, entry: _Entry) -> None:
+        """Insert + LRU-evict down to budget (caller holds the lock)."""
+        self._entries[key] = entry
+        self._bytes += entry.op.stream_bytes
+        while self._bytes > self.byte_budget and len(self._entries) > 1:
+            old_key, old = next(iter(self._entries.items()))
+            if old_key == key:
+                break  # never evict the entry just inserted
+            del self._entries[old_key]
+            self._bytes -= old.op.stream_bytes
+            self.stats.evictions += 1

@@ -48,10 +48,23 @@ class SerpensSpMV:
         return self.host.padding_ratio
 
     # -- compute ----------------------------------------------------------
+    def _check_x(self, x, what: str):
+        k = self.shape[1]
+        if x.ndim < 1 or x.shape[0] != k:
+            raise ValueError(
+                f"{what} has shape {tuple(x.shape)}; matrix of shape "
+                f"{self.shape} needs leading dimension K={k}")
+
     def matvec(self, x, backend: str | None = None):
         """Raw A @ x (no epilogue)."""
         m, k = self.shape
-        xp = ops.pad_x(jnp.asarray(x), self.host.num_segments,
+        x = jnp.asarray(x)
+        if x.ndim != 1:
+            raise ValueError(
+                f"matvec needs a 1-D x, got shape {tuple(x.shape)} "
+                f"(use matmat for multi-vector)")
+        self._check_x(x, "x")
+        xp = ops.pad_x(x, self.host.num_segments,
                        self.config.segment_width)
         acc = ops.run_spmv(
             self.idx, self.val, self.seg_ids_tile, self.seg_ids_chunk, xp,
@@ -78,6 +91,11 @@ class SerpensSpMV:
         m, k = self.shape
         kp = self.host.num_segments * self.config.segment_width
         x_mat = jnp.asarray(x_mat, jnp.float32)
+        if x_mat.ndim != 2:
+            raise ValueError(
+                f"matmat needs a (K, N) matrix, got shape "
+                f"{tuple(x_mat.shape)}")
+        self._check_x(x_mat, "x_mat")
         xp = jnp.pad(x_mat, ((0, kp - x_mat.shape[0]), (0, 0)))
         backend = backend or self.backend
         if backend == "pallas" or (backend == "auto"

@@ -50,6 +50,18 @@ def power_law_graph(n, nnz, seed=0, exponent=1.1):
     return dedupe(perm[rows], perm[cols], vals, (n, n))
 
 
+def column_normalize(rows, cols, vals, n, eps=1e-12):
+    """Out-degree normalization: |A[i,j]| / deg_out(j), column-substochastic.
+
+    The form the pagerank solver expects (``repro.solvers.pagerank``);
+    dangling (all-zero) columns stay zero — the solver redistributes their
+    mass uniformly each step.
+    """
+    colsum = np.zeros(n)
+    np.add.at(colsum, cols, np.abs(vals))
+    return (np.abs(vals) / np.maximum(colsum[cols], eps)).astype(np.float32)
+
+
 def banded(n, bandwidth, seed=0):
     """FEM-like banded matrix (e.g. G2/G4/G5 stand-ins)."""
     rng = np.random.default_rng(seed)

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs import ARCHS, SHAPES, get_config, valid_cells
 from repro.launch import hlo_analysis
 from repro.launch.mesh import make_production_mesh, dp_axes
@@ -192,7 +193,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         compiled = lowered.compile()
         compile_s = time.time() - t0
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = compat.cost_analysis(compiled)
         hlo_text = compiled.as_text()
         coll = collective_bytes(hlo_text)
         scan_aware = hlo_analysis.analyze(hlo_text)

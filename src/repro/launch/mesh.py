@@ -10,21 +10,18 @@ state (the dry-run sets XLA_FLAGS *before* any jax initialization).
 """
 from __future__ import annotations
 
-import jax
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=axis_types)
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over host devices (tests / examples)."""
-    axis_types = (jax.sharding.AxisType.Auto,) * 2
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=axis_types)
+    return compat.make_mesh((data, model), ("data", "model"))
 
 
 def dp_axes(mesh) -> tuple[str, ...]:

@@ -10,6 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.models import layers
 from repro.models.layers import dense_init, apply_rope, shard
 # (layers._CTX powers the mesh-aware constraints below)
@@ -332,7 +333,7 @@ def attn_decode_seqsharded(p, x, cfg, cache_k, cache_v, pos, mesh, dp):
         out = num / jnp.moveaxis(den, -1, 1)[..., None]
         return out.astype(cv.dtype), ck, cv
 
-    f = jax.shard_map(
+    f = compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(None, dp), P(None, dp), P(), P(), P()),
         out_specs=(P(), P(None, dp), P(None, dp)))

@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 # ---------------------------------------------------------------------------
 # Mesh-aware sharding-constraint helper.  Model code calls ``shard(x, spec)``;
 # it is a no-op unless a mesh context has been installed (launch code does
@@ -180,7 +182,7 @@ def serve_linear_col(x, w):
                                                axis=2)
         return jax.lax.psum(jnp.einsum("bsd,df->bsf", x_slice, wl), dp)
 
-    f = jax.shard_map(body, mesh=mesh,
+    f = compat.shard_map(body, mesh=mesh,
                       in_specs=(P(dp, tp),
                                 P(dp) if tokens_sharded else P()),
                       out_specs=P(None, None, tp))
@@ -203,7 +205,7 @@ def serve_linear_row(x, w):
     def body(wl, xl):
         return jax.lax.psum(jnp.einsum("bsf,fd->bsd", xl, wl), tp)
 
-    f = jax.shard_map(body, mesh=mesh,
+    f = compat.shard_map(body, mesh=mesh,
                       in_specs=(P(tp, dp), P(None, None, tp)),
                       out_specs=P(None, None, dp))
     return f(w, x)
@@ -246,7 +248,7 @@ def _ffn_serve_sharded(params, x, act_name, mesh):
         return jax.lax.psum(o, tp)
 
     tok_spec = P(dp) if tokens_sharded else P()
-    f = jax.shard_map(
+    f = compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(dp, tp), P(dp, tp), P(tp, dp), tok_spec),
         out_specs=P(None, None, dp))

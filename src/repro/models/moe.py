@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.models import layers
 from repro.models.layers import dense_init, activation, shard
 
@@ -178,7 +179,7 @@ def _dispatch_ragged_ep(params, xt, topi, topw, cfg, mesh):
         y = ys.reshape(tl, k, d).sum(axis=1)
         return jax.lax.psum(y, tp)
 
-    f = jax.shard_map(
+    f = compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(tp), P(tp), P(tp), P(dp), P(dp), P(dp)),
         out_specs=P(dp))
@@ -249,7 +250,7 @@ def _dispatch_ragged_ep_decode(params, xt, topi, topw, cfg, mesh):
         return jax.lax.psum(y, tp)
 
     tok_spec = P(dp) if tokens_sharded else P()
-    f = jax.shard_map(
+    f = compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(tp, dp), P(tp, dp), P(tp, None, dp),
                   tok_spec, tok_spec, tok_spec),

@@ -1,0 +1,221 @@
+"""SpMV serving: request micro-batcher over the matrix registry.
+
+The paper's cost model (Sec. 2.2) makes the serving strategy obvious: one
+SpMV streams all of A (8 B/nnz) to touch each x element once, so A-traffic
+dominates.  Sextans' multi-vector contrast — and this repo's ``matmat`` —
+amortizes a single A-stream over N vectors, cutting stream-bytes/vector by
+N×.  ``SpMVService`` productizes that: callers submit independent
+``(matrix_id, x, alpha, beta)`` requests; ``flush`` coalesces same-matrix
+requests into SpMM calls whose width is padded to a power of two (bounding
+the set of compiled shapes), dispatches through the existing backends, and
+applies each request's private (α, β) epilogue column-wise.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.registry import MatrixRegistry
+
+
+def bucket_width(n: int, max_bucket: int) -> int:
+    """Pad a batch width to the next power of two, capped at ``max_bucket``.
+
+    Every distinct (matrix, width) pair costs one XLA compile; power-of-two
+    buckets bound that set to log2(max_bucket)+1 shapes per matrix.
+    """
+    if n < 1:
+        raise ValueError("batch width must be >= 1")
+    w = 1
+    while w < n:
+        w *= 2
+    return min(w, max_bucket)
+
+
+@dataclasses.dataclass
+class SpMVRequest:
+    ticket: int
+    matrix_id: str
+    op: object          # SerpensSpMV captured at submit — a later registry
+                        # eviction cannot strand an already-queued request
+    x: np.ndarray
+    alpha: float
+    beta: float
+    y: np.ndarray | None
+    submit_time: float
+
+
+@dataclasses.dataclass
+class SpMVResult:
+    """Per-request outcome + the serving economics of its batch."""
+    ticket: int
+    y: np.ndarray
+    latency_s: float          # submit → result materialized
+    batch_size: int           # real requests coalesced in this SpMM call
+    bucket_n: int             # padded width actually dispatched
+    stream_bytes_per_vector: float  # A-stream bytes / real vectors in batch
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    batches: int = 0
+    stream_bytes: int = 0     # total A-stream traffic dispatched
+    vectors: int = 0          # real vectors (= requests) served
+
+    @property
+    def amortized_bytes_per_vector(self) -> float:
+        return self.stream_bytes / self.vectors if self.vectors else 0.0
+
+    @property
+    def mean_batch_size(self) -> float:
+        return self.vectors / self.batches if self.batches else 0.0
+
+
+class SpMVService:
+    """Micro-batching front-end for registry-resident sparse matrices.
+
+    Usage::
+
+        reg = MatrixRegistry()
+        mid = reg.put(rows, cols, vals, shape)
+        svc = SpMVService(reg, max_bucket=16)
+        t1 = svc.submit(mid, x1)
+        t2 = svc.submit(mid, x2, alpha=2.0)
+        results = svc.flush()          # one SpMM for both requests
+        y1 = results[t1].y
+    """
+
+    def __init__(self, registry: MatrixRegistry, max_bucket: int = 16,
+                 backend: str | None = None):
+        if max_bucket < 1 or max_bucket & (max_bucket - 1):
+            raise ValueError("max_bucket must be a power of two >= 1")
+        self.registry = registry
+        self.max_bucket = max_bucket
+        self.backend = backend
+        self.stats = ServiceStats()
+        # submit() is thread-safe; flush() is meant to run on one dispatcher
+        # thread (the micro-batcher pattern).
+        self._lock = threading.Lock()
+        self._pending: list[SpMVRequest] = []
+        self._next_ticket = 0
+
+    # -- submission -------------------------------------------------------
+    def submit(self, matrix_id: str, x, alpha: float = 1.0,
+               beta: float = 0.0, y=None) -> int:
+        """Queue one ``y_out = α·A·x + β·y`` request; returns a ticket."""
+        op = self.registry.get(matrix_id)   # validates id, refreshes LRU
+        # Copy on enqueue: the caller may reuse/mutate its buffer before
+        # flush (np.asarray would alias an already-float32 input).
+        x = np.array(x, np.float32)
+        if x.ndim != 1 or x.shape[0] != op.shape[1]:
+            raise ValueError(
+                f"x has shape {x.shape}; matrix {matrix_id!r} needs a "
+                f"length-{op.shape[1]} vector")
+        if beta != 0.0 and y is None:
+            raise ValueError("beta != 0 requires y")
+        if y is not None:
+            y = np.array(y, np.float32)
+            if y.shape != (op.shape[0],):
+                raise ValueError(
+                    f"y has shape {y.shape}; expected ({op.shape[0]},)")
+        with self._lock:
+            ticket = self._next_ticket
+            self._next_ticket += 1
+            self._pending.append(SpMVRequest(
+                ticket=ticket, matrix_id=matrix_id, op=op, x=x,
+                alpha=float(alpha), beta=float(beta), y=y,
+                submit_time=time.perf_counter()))
+        return ticket
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    # -- dispatch ---------------------------------------------------------
+    def flush(self) -> dict[int, SpMVResult]:
+        """Dispatch all pending requests; returns {ticket: result}.
+
+        Same-matrix requests are coalesced into SpMM calls of at most
+        ``max_bucket`` vectors, padded up to the bucket width with zero
+        columns (padding costs FLOPs, not A-stream traffic — the stream is
+        read once per call regardless of N).
+        """
+        with self._lock:
+            pending, self._pending = self._pending, []
+        # Coalesce on the operator captured at submit time: still valid even
+        # if the registry evicted the id since, and two requests only share
+        # a batch when they truly share a matrix (an id re-registered with
+        # new content mid-queue lands in its own group).
+        groups: dict[int, list[SpMVRequest]] = {}
+        for req in pending:
+            groups.setdefault(id(req.op), []).append(req)
+        batches = [reqs[i:i + self.max_bucket]
+                   for reqs in groups.values()
+                   for i in range(0, len(reqs), self.max_bucket)]
+        results: dict[int, SpMVResult] = {}
+        for bi, batch in enumerate(batches):
+            try:
+                self._dispatch(batch[0].op, batch, results)
+            except Exception:
+                # The exception discards `results`, so requests from already-
+                # dispatched batches would be stranded too: re-queue every
+                # batch (SpMV is pure — re-dispatch on the next flush is
+                # safe) and roll back the served batches' stats.
+                for done in batches[:bi]:
+                    self.stats.batches -= 1
+                    self.stats.vectors -= len(done)
+                    self.stats.stream_bytes -= done[0].op.stream_bytes
+                with self._lock:
+                    self._pending[:0] = [r for b in batches for r in b]
+                raise
+        return results
+
+    def serve(self, requests) -> list[np.ndarray]:
+        """Convenience: submit an iterable of (matrix_id, x[, alpha, beta])
+        tuples, flush, and return the y's in submission order."""
+        tickets = [self.submit(*r) for r in requests]
+        results = self.flush()
+        return [results[t].y for t in tickets]
+
+    def _dispatch(self, op, batch: list[SpMVRequest],
+                  results: dict[int, SpMVResult]) -> None:
+        n = len(batch)
+        width = bucket_width(n, self.max_bucket)
+        if n == 1 and width == 1:
+            # Single-request fast path: the paper's plain SpMV.
+            req = batch[0]
+            acc = op.matvec(req.x, backend=self.backend)
+            out = req.alpha * acc
+            if req.beta != 0.0:
+                out = out + req.beta * jnp.asarray(req.y, jnp.float32)
+            ys = np.asarray(out, np.float32)[:, None]
+        else:
+            x_mat = np.zeros((op.shape[1], width), np.float32)
+            y_mat = np.zeros((op.shape[0], width), np.float32)
+            alphas = np.zeros((width,), np.float32)
+            betas = np.zeros((width,), np.float32)
+            for j, req in enumerate(batch):
+                x_mat[:, j] = req.x
+                alphas[j] = req.alpha
+                betas[j] = req.beta
+                if req.y is not None:
+                    y_mat[:, j] = req.y
+            acc = op.matmat(x_mat, backend=self.backend)   # raw A @ X
+            out = (acc * jnp.asarray(alphas)[None, :]
+                   + jnp.asarray(y_mat) * jnp.asarray(betas)[None, :])
+            ys = np.asarray(out, np.float32)
+        done = time.perf_counter()
+        bytes_per_vec = op.stream_bytes / n
+        self.stats.batches += 1
+        self.stats.vectors += n
+        self.stats.stream_bytes += op.stream_bytes
+        for j, req in enumerate(batch):
+            results[req.ticket] = SpMVResult(
+                ticket=req.ticket, y=ys[:, j],
+                latency_s=done - req.submit_time,
+                batch_size=n, bucket_n=width,
+                stream_bytes_per_vector=bytes_per_vec)

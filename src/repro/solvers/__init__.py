@@ -1,0 +1,9 @@
+"""Iterative solvers that run whole solves on-device over the Serpens
+operator (``jax.lax.while_loop`` — one compile, no host round-trips per
+iteration)."""
+from repro.solvers.power_iteration import (PowerResult, pagerank,
+                                           power_iteration)
+from repro.solvers.cg import CGResult, conjugate_gradient
+
+__all__ = ["PowerResult", "pagerank", "power_iteration",
+           "CGResult", "conjugate_gradient"]

@@ -1,0 +1,68 @@
+"""Conjugate gradient on a Serpens-resident SPD matrix.
+
+The scientific-solver workload (the paper's FEM/circuit matrices G2/G4/G5):
+solve A·x = b with one SpMV per iteration, the whole loop compiled as a
+single ``jax.lax.while_loop`` so the A-stream is the only per-iteration
+off-chip traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class CGResult:
+    x: jnp.ndarray
+    iterations: int
+    residual: float          # ‖b − A·x‖₂ (estimate carried by the recursion)
+    converged: bool
+
+
+def conjugate_gradient(op, b, x0=None, tol: float = 1e-6,
+                       max_iters: int | None = None,
+                       backend: str | None = None) -> CGResult:
+    """Solve ``A x = b`` for symmetric positive-definite A.
+
+    Stops when ``‖r‖₂ <= tol * ‖b‖₂`` (relative residual) or after
+    ``max_iters`` (default: n, CG's exact-arithmetic bound).
+    """
+    m, k = op.shape
+    if m != k:
+        raise ValueError(f"CG needs a square (SPD) matrix, got {op.shape}")
+    b = jnp.asarray(b, jnp.float32)
+    if b.shape != (m,):
+        raise ValueError(f"b has shape {b.shape}; expected ({m},)")
+    x_init = (jnp.zeros((m,), jnp.float32) if x0 is None
+              else jnp.asarray(x0, jnp.float32))
+    if max_iters is None:
+        max_iters = m
+    b_norm = jnp.linalg.norm(b)
+    stop = tol * jnp.maximum(b_norm, 1e-30)
+
+    r_init = b - op.matvec(x_init, backend=backend)
+    rs_init = jnp.dot(r_init, r_init)
+
+    def cond(state):
+        _, _, _, rs, it = state
+        return (jnp.sqrt(rs) > stop) & (it < max_iters)
+
+    def body(state):
+        x, r, p, rs, it = state
+        ap = op.matvec(p, backend=backend)
+        denom = jnp.dot(p, ap)
+        alpha = rs / jnp.where(denom != 0, denom, 1e-30)
+        x_new = x + alpha * p
+        r_new = r - alpha * ap
+        rs_new = jnp.dot(r_new, r_new)
+        beta = rs_new / jnp.where(rs != 0, rs, 1e-30)
+        p_new = r_new + beta * p
+        return x_new, r_new, p_new, rs_new, it + 1
+
+    x, r, _, rs, iters = jax.lax.while_loop(
+        cond, body, (x_init, r_init, r_init, rs_init, jnp.int32(0)))
+    res = float(jnp.sqrt(rs))
+    return CGResult(x=x, iterations=int(iters), residual=res,
+                    converged=res <= float(stop))

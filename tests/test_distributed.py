@@ -13,6 +13,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro import compat
 from repro.core.distributed import ShardedSerpensSpMV
 from repro.core import format as F
 from repro.core.spmv import SerpensSpMV
@@ -35,8 +36,7 @@ y0 = np.random.default_rng(1).normal(size=600).astype(np.float32)
 cfg = F.SerpensConfig(segment_width=128, lanes=16, sublanes=8)
 ref = spmv_coo_ref(jnp.asarray(rows), jnp.asarray(cols), jnp.asarray(vals),
                    jnp.asarray(x), 600, 1.5, 0.5, jnp.asarray(y0))
-mesh8 = jax.make_mesh((8,), ("x",),
-                      axis_types=(jax.sharding.AxisType.Auto,))
+mesh8 = compat.make_mesh((8,), ("x",))
 for part in ("row", "col"):
     d = ShardedSerpensSpMV(rows, cols, vals, (600, 800), mesh8, "x",
                            part, cfg)
@@ -49,7 +49,7 @@ for part in ("row", "col"):
 def body(g):
     return compressed_psum(g, "x")
 g = np.random.default_rng(2).normal(size=(8, 128)).astype(np.float32)
-f = jax.shard_map(body, mesh=mesh8, in_specs=P("x"), out_specs=P("x"))
+f = compat.shard_map(body, mesh=mesh8, in_specs=P("x"), out_specs=P("x"))
 approx = np.asarray(f(jnp.asarray(g)))[0]
 exact = g.sum(0)
 rel = np.abs(approx - exact).max() / (np.abs(exact).max() + 1e-9)
@@ -136,8 +136,7 @@ x8 = np.random.default_rng(9).normal(size=4096).astype(np.float32)
 ref8 = spmv_coo_ref(jnp.asarray(rows8), jnp.asarray(cols8),
                     jnp.asarray(vals8), jnp.asarray(x8), 4096)
 for nd in (1, 8):
-    mesh_n = jax.make_mesh((nd,), ("x",),
-                           axis_types=(jax.sharding.AxisType.Auto,))
+    mesh_n = compat.make_mesh((nd,), ("x",))
     dd = ShardedSerpensSpMV(rows8, cols8, vals8, (4096, 4096), mesh_n,
                             "x", "row", cfg)
     got8 = dd(x8)
@@ -176,7 +175,9 @@ print("PASS:" + ",".join(ok))
 def test_distributed_suite():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    env.pop("JAX_PLATFORMS", None)
+    # CPU platform, 8 simulated devices via XLA_FLAGS (see test_launchers
+    # for why leaving the platform unset stalls on libtpu metadata probes).
+    env["JAX_PLATFORMS"] = "cpu"
     res = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
                          capture_output=True, text=True, timeout=1200)
     assert res.returncode == 0, res.stdout[-3000:] + res.stderr[-3000:]

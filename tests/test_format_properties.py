@@ -1,0 +1,44 @@
+"""Hypothesis property tests for the Serpens format (optional dependency).
+
+Skipped wholesale when ``hypothesis`` is not installed; the deterministic
+format tests in ``test_format.py`` always run.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import format as F  # noqa: E402
+from test_format import rand_coo, dense_of  # noqa: E402
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 120), st.integers(1, 150), st.integers(0, 400),
+       st.integers(0, 10_000))
+def test_property_roundtrip_and_raw(m, k, nnz, seed):
+    rows, cols, vals = rand_coo(m, k, max(nnz, 0) or 1, seed, dupes=True)
+    cfg = F.SerpensConfig(segment_width=32, lanes=4, sublanes=4,
+                          raw_window=4)
+    sm = F.encode(rows, cols, vals, (m, k), cfg)
+    F.check_invariants(sm)
+    r2, c2, v2 = F.decode_to_coo(sm)
+    np.testing.assert_allclose(dense_of(r2, c2, v2, (m, k)),
+                               dense_of(rows, cols, vals, (m, k)),
+                               rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 100), st.integers(1, 120), st.integers(1, 400),
+       st.integers(0, 9999))
+def test_property_spill_preserves_matrix(m, k, nnz, seed):
+    rows, cols, vals = rand_coo(m, k, nnz, seed, dupes=True)
+    cfg = F.SerpensConfig(segment_width=32, lanes=4, sublanes=4,
+                          raw_window=2, spill_hot_rows=True,
+                          lane_balance=1.2)
+    sm = F.encode(rows, cols, vals, (m, k), cfg)
+    F.check_invariants(sm)
+    r2, c2, v2 = F.decode_to_coo(sm)
+    np.testing.assert_allclose(dense_of(r2, c2, v2, (m, k)),
+                               dense_of(rows, cols, vals, (m, k)),
+                               rtol=1e-5, atol=1e-5)

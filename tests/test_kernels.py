@@ -1,13 +1,13 @@
 """Pallas kernel vs pure-jnp oracle: shape/density/config sweeps.
 
 Every sweep asserts allclose against ref.py (the COO oracle) — the
-requirement for kernels/ in this framework.
+requirement for kernels/ in this framework.  Hypothesis property tests live
+in ``test_kernels_properties.py`` (skipped without ``hypothesis``).
 """
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import format as F
 from repro.core.spmv import SerpensSpMV, from_dense
@@ -86,25 +86,6 @@ def test_x_dtype(xdtype):
                                rtol=tol, atol=tol)
 
 
-@settings(max_examples=15, deadline=None)
-@given(st.integers(1, 80), st.integers(1, 140), st.integers(1, 500),
-       st.integers(0, 99999))
-def test_property_pallas_vs_dense(m, k, nnz, seed):
-    rng = np.random.default_rng(seed)
-    a = np.zeros((m, k), np.float32)
-    rows = rng.integers(0, m, nnz)
-    cols = rng.integers(0, k, nnz)
-    a[rows, cols] = rng.normal(size=nnz)
-    x = rng.normal(size=k).astype(np.float32)
-    cfg = F.SerpensConfig(segment_width=32, lanes=4, sublanes=4,
-                          raw_window=4)
-    op = from_dense(a, cfg)
-    ref = spmv_dense_ref(jnp.asarray(a), jnp.asarray(x))
-    got = op.matvec(x, backend="pallas")
-    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
-                               rtol=2e-4, atol=2e-4)
-
-
 def test_spmm_matches_oracle():
     rows, cols, vals, _ = build(70, 90, 500, CFGS[0], seed=11)
     rng = np.random.default_rng(12)
@@ -127,6 +108,42 @@ def test_alpha_beta_epilogue():
     got = op(x, alpha=-1.5, beta=0.25, y=y, backend="pallas")
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                rtol=1e-5, atol=1e-5)
+
+
+class TestInputValidation:
+    """Wrong-length x must fail fast with a clear message (not deep in
+    ``ops.pad_x`` with a negative pad width)."""
+
+    @pytest.fixture()
+    def op(self):
+        rows, cols, vals, _ = build(40, 50, 200, CFGS[0], seed=13)
+        return SerpensSpMV(rows, cols, vals, (40, 50), CFGS[0])
+
+    @pytest.mark.parametrize("bad_len", [0, 49, 51, 500])
+    def test_matvec_rejects_wrong_length(self, op, bad_len):
+        with pytest.raises(ValueError, match="K=50"):
+            op.matvec(np.zeros(bad_len, np.float32))
+
+    def test_call_rejects_wrong_length(self, op):
+        with pytest.raises(ValueError, match="K=50"):
+            op(np.zeros(49, np.float32))
+
+    @pytest.mark.parametrize("bad_len", [49, 51])
+    def test_matmat_rejects_wrong_leading_dim(self, op, bad_len):
+        with pytest.raises(ValueError, match="K=50"):
+            op.matmat(np.zeros((bad_len, 3), np.float32))
+
+    def test_matmat_rejects_non_2d(self, op):
+        with pytest.raises(ValueError, match=r"\(K, N\)"):
+            op.matmat(np.zeros((50,), np.float32))
+
+    def test_matvec_rejects_2d(self, op):
+        with pytest.raises(ValueError, match="1-D"):
+            op.matvec(np.zeros((50, 3), np.float32))
+
+    def test_valid_shapes_still_pass(self, op):
+        assert op.matvec(np.zeros(50, np.float32)).shape == (40,)
+        assert op.matmat(np.zeros((50, 2), np.float32)).shape == (40, 2)
 
 
 class TestFlashAttention:

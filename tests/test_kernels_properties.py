@@ -1,0 +1,34 @@
+"""Hypothesis property tests for the Serpens kernels (optional dependency).
+
+Skipped wholesale when ``hypothesis`` is not installed; the deterministic
+kernel sweeps in ``test_kernels.py`` always run.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import format as F  # noqa: E402
+from repro.core.spmv import from_dense  # noqa: E402
+from repro.kernels.ref import spmv_dense_ref  # noqa: E402
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 80), st.integers(1, 140), st.integers(1, 500),
+       st.integers(0, 99999))
+def test_property_pallas_vs_dense(m, k, nnz, seed):
+    rng = np.random.default_rng(seed)
+    a = np.zeros((m, k), np.float32)
+    rows = rng.integers(0, m, nnz)
+    cols = rng.integers(0, k, nnz)
+    a[rows, cols] = rng.normal(size=nnz)
+    x = rng.normal(size=k).astype(np.float32)
+    cfg = F.SerpensConfig(segment_width=32, lanes=4, sublanes=4,
+                          raw_window=4)
+    op = from_dense(a, cfg)
+    ref = spmv_dense_ref(jnp.asarray(a), jnp.asarray(x))
+    got = op.matvec(x, backend="pallas")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)

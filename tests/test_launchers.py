@@ -11,7 +11,11 @@ ROOT = os.path.join(os.path.dirname(__file__), "..")
 def _run(args, timeout=600, extra_env=None):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    env.pop("JAX_PLATFORMS", None)
+    # Force the CPU platform: with libtpu installed but no TPU attached,
+    # leaving the platform unset makes jax's TPU plugin stall ~8 min on
+    # metadata queries before falling back.  Multi-device simulation comes
+    # from XLA_FLAGS (the CLIs set it), not from the platform choice.
+    env["JAX_PLATFORMS"] = "cpu"
     if extra_env:
         env.update(extra_env)
     res = subprocess.run([sys.executable] + args, env=env,

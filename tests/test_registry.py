@@ -1,0 +1,152 @@
+"""MatrixRegistry: content hashing, hit/miss stats, byte-budget LRU."""
+import numpy as np
+import pytest
+
+from repro.core import format as F
+from repro.core import registry as R
+from repro.core.spmv import SerpensSpMV
+
+CFG = F.SerpensConfig(segment_width=64, lanes=8, sublanes=4, raw_window=4)
+
+
+def coo(m, k, nnz, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, m, nnz), rng.integers(0, k, nnz),
+            rng.normal(size=nnz).astype(np.float32))
+
+
+class TestContentKey:
+    def test_deterministic_and_discriminating(self):
+        r, c, v = coo(32, 32, 100, seed=1)
+        k1 = R.content_key(r, c, v, (32, 32), CFG)
+        k2 = R.content_key(r.copy(), c.copy(), v.copy(), (32, 32), CFG)
+        assert k1 == k2
+        v2 = v.copy(); v2[0] += 1.0
+        assert R.content_key(r, c, v2, (32, 32), CFG) != k1
+        assert R.content_key(r, c, v, (32, 64), CFG) != k1
+        cfg2 = F.SerpensConfig(segment_width=32, lanes=8, sublanes=4,
+                               raw_window=4)
+        assert R.content_key(r, c, v, (32, 32), cfg2) != k1
+
+
+class TestCaching:
+    def test_repeat_put_is_hit_and_encodes_once(self, monkeypatch):
+        calls = {"n": 0}
+        orig = F.encode
+
+        def counting_encode(*a, **kw):
+            calls["n"] += 1
+            return orig(*a, **kw)
+
+        monkeypatch.setattr(F, "encode", counting_encode)
+        reg = R.MatrixRegistry(config=CFG)
+        r, c, v = coo(40, 60, 300, seed=2)
+        mid1 = reg.put(r, c, v, (40, 60))
+        mid2 = reg.put(r, c, v, (40, 60))
+        assert mid1 == mid2
+        assert calls["n"] == 1                    # encode ran exactly once
+        assert reg.stats.encodes == 1
+        assert reg.stats.hits == 1 and reg.stats.misses == 1
+        assert reg.stats.encode_seconds > 0.0
+
+    def test_get_returns_working_operator(self):
+        reg = R.MatrixRegistry(config=CFG)
+        r, c, v = coo(30, 50, 200, seed=3)
+        mid = reg.put(r, c, v, (30, 50))
+        op = reg.get(mid)
+        x = np.random.default_rng(4).normal(size=50).astype(np.float32)
+        dense = op.to_dense()
+        np.testing.assert_allclose(np.asarray(op.matvec(x)), dense @ x,
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_get_missing_raises_and_counts_miss(self):
+        reg = R.MatrixRegistry(config=CFG)
+        with pytest.raises(KeyError, match="nope"):
+            reg.get("nope")
+        assert reg.stats.misses == 1
+
+    def test_explicit_matrix_id(self):
+        reg = R.MatrixRegistry(config=CFG)
+        r, c, v = coo(16, 16, 40, seed=5)
+        assert reg.put(r, c, v, (16, 16), matrix_id="layer0/w") == "layer0/w"
+        assert "layer0/w" in reg
+
+    def test_explicit_id_new_content_replaces(self):
+        """Re-using a name with different data must not serve stale data."""
+        reg = R.MatrixRegistry(config=CFG)
+        r, c, v = coo(16, 16, 40, seed=15)
+        reg.put(r, c, v, (16, 16), matrix_id="w")
+        reg.put(r, c, v * 2, (16, 16), matrix_id="w")   # new content
+        assert reg.stats.encodes == 2 and reg.stats.misses == 2
+        assert len(reg) == 1
+        want = np.zeros((16, 16), np.float32)
+        np.add.at(want, (r, c), v * 2)
+        np.testing.assert_allclose(reg.get("w").to_dense(), want,
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_put_operator_adopts(self):
+        reg = R.MatrixRegistry(config=CFG)
+        r, c, v = coo(16, 24, 50, seed=6)
+        op = SerpensSpMV(r, c, v, (16, 24), CFG)
+        mid = reg.put_operator(op, matrix_id="adopted")
+        assert reg.get(mid) is op
+        assert reg.stats.encodes == 0
+
+    def test_put_operator_dedupes_identical_streams(self):
+        reg = R.MatrixRegistry(config=CFG)
+        r, c, v = coo(16, 24, 50, seed=6)
+        mid1 = reg.put_operator(SerpensSpMV(r, c, v, (16, 24), CFG))
+        mid2 = reg.put_operator(SerpensSpMV(r, c, v, (16, 24), CFG))
+        assert mid1 == mid2 and len(reg) == 1
+        assert reg.stats.hits == 1
+
+
+class TestLRU:
+    def test_eviction_by_stream_bytes(self):
+        reg = R.MatrixRegistry(config=CFG)
+        r, c, v = coo(40, 60, 300, seed=7)
+        mid = reg.put(r, c, v, (40, 60))
+        per_entry = reg.get(mid).stream_bytes
+        # budget for exactly two entries
+        reg2 = R.MatrixRegistry(byte_budget=2 * per_entry + per_entry // 2,
+                                config=CFG)
+        mids = []
+        for seed in (7, 8, 9):
+            r, c, v = coo(40, 60, 300, seed=seed)
+            mids.append(reg2.put(r, c, v, (40, 60)))
+        assert len(reg2) == 2
+        assert mids[0] not in reg2                # LRU evicted
+        assert mids[1] in reg2 and mids[2] in reg2
+        assert reg2.stats.evictions == 1
+        assert reg2.bytes_in_use <= reg2.byte_budget
+
+    def test_recency_refresh_protects_entry(self):
+        r0, c0, v0 = coo(40, 60, 300, seed=10)
+        probe = R.MatrixRegistry(config=CFG)
+        per_entry = probe.get(probe.put(r0, c0, v0, (40, 60))).stream_bytes
+        reg = R.MatrixRegistry(byte_budget=2 * per_entry + per_entry // 2,
+                               config=CFG)
+        a = reg.put(r0, c0, v0, (40, 60))
+        r1, c1, v1 = coo(40, 60, 300, seed=11)
+        b = reg.put(r1, c1, v1, (40, 60))
+        reg.get(a)                                # touch a → b becomes LRU
+        r2, c2, v2 = coo(40, 60, 300, seed=12)
+        reg.put(r2, c2, v2, (40, 60))
+        assert a in reg and b not in reg
+
+    def test_single_oversized_entry_still_serves(self):
+        reg = R.MatrixRegistry(byte_budget=1, config=CFG)
+        r, c, v = coo(30, 40, 100, seed=13)
+        mid = reg.put(r, c, v, (30, 40))
+        assert mid in reg and reg.over_budget
+
+    def test_bytes_accounting_on_evict_and_clear(self):
+        reg = R.MatrixRegistry(config=CFG)
+        r, c, v = coo(30, 40, 100, seed=14)
+        mid = reg.put(r, c, v, (30, 40))
+        assert reg.bytes_in_use == reg.get(mid).stream_bytes
+        reg.evict(mid)
+        assert reg.bytes_in_use == 0 and len(reg) == 0
+        mid = reg.put(r, c, v, (30, 40))
+        reg.clear()
+        assert reg.bytes_in_use == 0 and len(reg) == 0

@@ -1,0 +1,226 @@
+"""SpMVService: bucketing correctness vs dense reference + amortization."""
+import numpy as np
+import pytest
+
+from repro.core import format as F
+from repro.core.registry import MatrixRegistry
+from repro.serve.spmv_service import SpMVService, bucket_width
+
+CFG = F.SerpensConfig(segment_width=64, lanes=8, sublanes=4, raw_window=4)
+
+
+def make_registry(m=48, k=56, nnz=400, seed=0, backend="auto"):
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, m, nnz)
+    cols = rng.integers(0, k, nnz)
+    vals = rng.normal(size=nnz).astype(np.float32)
+    reg = MatrixRegistry(config=CFG, backend=backend)
+    mid = reg.put(rows, cols, vals, (m, k))
+    return reg, mid, reg.get(mid).to_dense()
+
+
+def test_bucket_width():
+    assert [bucket_width(n, 16) for n in (1, 2, 3, 5, 8, 9, 16)] \
+        == [1, 2, 4, 8, 8, 16, 16]
+    assert bucket_width(100, 16) == 16
+    assert bucket_width(3, 4) == 4
+    with pytest.raises(ValueError):
+        bucket_width(0, 16)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_16_vector_bucket_matches_dense(backend):
+    """Acceptance: a 16-vector bucketed run matches dense NumPy (atol 1e-4)."""
+    reg, mid, dense = make_registry(seed=1)
+    svc = SpMVService(reg, max_bucket=16, backend=backend)
+    rng = np.random.default_rng(2)
+    xs = rng.normal(size=(16, dense.shape[1])).astype(np.float32)
+    tickets = [svc.submit(mid, x) for x in xs]
+    results = svc.flush()
+    assert svc.stats.batches == 1            # all 16 coalesced into one SpMM
+    for t, x in zip(tickets, xs):
+        res = results[t]
+        assert res.batch_size == 16 and res.bucket_n == 16
+        np.testing.assert_allclose(res.y, dense @ x, atol=1e-4, rtol=1e-4)
+
+
+def test_per_request_alpha_beta_epilogue():
+    reg, mid, dense = make_registry(seed=3)
+    svc = SpMVService(reg, max_bucket=8)
+    rng = np.random.default_rng(4)
+    m, k = dense.shape
+    reqs = []
+    for i in range(5):
+        x = rng.normal(size=k).astype(np.float32)
+        y = rng.normal(size=m).astype(np.float32)
+        alpha, beta = float(rng.normal()), float(rng.normal())
+        reqs.append((svc.submit(mid, x, alpha=alpha, beta=beta, y=y),
+                     x, y, alpha, beta))
+    results = svc.flush()
+    for t, x, y, alpha, beta in reqs:
+        np.testing.assert_allclose(results[t].y, alpha * (dense @ x)
+                                   + beta * y, atol=1e-4, rtol=1e-4)
+
+
+def test_padded_bucket_correct():
+    """3 requests pad to a 4-wide bucket; padding columns must not leak."""
+    reg, mid, dense = make_registry(seed=5)
+    svc = SpMVService(reg, max_bucket=16)
+    rng = np.random.default_rng(6)
+    xs = rng.normal(size=(3, dense.shape[1])).astype(np.float32)
+    tickets = [svc.submit(mid, x) for x in xs]
+    results = svc.flush()
+    for t, x in zip(tickets, xs):
+        assert results[t].bucket_n == 4 and results[t].batch_size == 3
+        np.testing.assert_allclose(results[t].y, dense @ x,
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_oversized_burst_splits_into_buckets():
+    reg, mid, dense = make_registry(seed=7)
+    svc = SpMVService(reg, max_bucket=4)
+    rng = np.random.default_rng(8)
+    xs = rng.normal(size=(10, dense.shape[1])).astype(np.float32)
+    tickets = [svc.submit(mid, x) for x in xs]
+    assert svc.pending == 10
+    results = svc.flush()
+    assert svc.pending == 0
+    assert svc.stats.batches == 3            # 4 + 4 + 2
+    for t, x in zip(tickets, xs):
+        np.testing.assert_allclose(results[t].y, dense @ x,
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_multi_matrix_grouping():
+    reg, mid_a, dense_a = make_registry(seed=9)
+    rng = np.random.default_rng(10)
+    rows = rng.integers(0, 32, 150)
+    cols = rng.integers(0, 56, 150)
+    vals = rng.normal(size=150).astype(np.float32)
+    mid_b = reg.put(rows, cols, vals, (32, 56))
+    dense_b = reg.get(mid_b).to_dense()
+    svc = SpMVService(reg, max_bucket=8)
+    xa = rng.normal(size=(2, 56)).astype(np.float32)
+    xb = rng.normal(size=(2, 56)).astype(np.float32)
+    ta = [svc.submit(mid_a, x) for x in xa]
+    tb = [svc.submit(mid_b, x) for x in xb]
+    results = svc.flush()
+    assert svc.stats.batches == 2            # one per matrix
+    for t, x in zip(ta, xa):
+        np.testing.assert_allclose(results[t].y, dense_a @ x,
+                                   atol=1e-4, rtol=1e-4)
+    for t, x in zip(tb, xb):
+        np.testing.assert_allclose(results[t].y, dense_b @ x,
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_amortization_improves_with_bucket():
+    reg, mid, dense = make_registry(seed=11)
+    stream_bytes = reg.get(mid).stream_bytes
+    rng = np.random.default_rng(12)
+    xs = rng.normal(size=(8, dense.shape[1])).astype(np.float32)
+    per_vec = {}
+    for bucket in (1, 4, 8):
+        svc = SpMVService(reg, max_bucket=bucket)
+        for x in xs:
+            svc.submit(mid, x)
+        res = svc.flush()
+        per_vec[bucket] = svc.stats.amortized_bytes_per_vector
+        assert all(r.latency_s >= 0 for r in res.values())
+    assert per_vec[1] == pytest.approx(stream_bytes)
+    assert per_vec[8] == pytest.approx(stream_bytes / 8)
+    assert per_vec[8] < per_vec[4] < per_vec[1]
+
+
+def test_submit_validation():
+    reg, mid, dense = make_registry(seed=13)
+    svc = SpMVService(reg, max_bucket=4)
+    with pytest.raises(KeyError):
+        svc.submit("unknown", np.zeros(dense.shape[1], np.float32))
+    with pytest.raises(ValueError, match="length-56"):
+        svc.submit(mid, np.zeros(13, np.float32))
+    with pytest.raises(ValueError, match="requires y"):
+        svc.submit(mid, np.zeros(dense.shape[1], np.float32), beta=0.5)
+    with pytest.raises(ValueError, match="power of two"):
+        SpMVService(reg, max_bucket=6)
+
+
+def test_flush_survives_eviction_between_submit_and_flush():
+    """Queued requests hold the operator; a registry eviction (LRU or
+    explicit) between submit and flush must not lose them."""
+    reg, mid, dense = make_registry(seed=16)
+    svc = SpMVService(reg, max_bucket=4)
+    rng = np.random.default_rng(17)
+    xs = rng.normal(size=(3, dense.shape[1])).astype(np.float32)
+    tickets = [svc.submit(mid, x) for x in xs]
+    reg.evict(mid)
+    assert mid not in reg
+    results = svc.flush()
+    for t, x in zip(tickets, xs):
+        np.testing.assert_allclose(results[t].y, dense @ x,
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_submit_copies_x_buffer():
+    """Mutating the caller's buffer after submit must not corrupt the
+    queued request."""
+    reg, mid, dense = make_registry(seed=18)
+    svc = SpMVService(reg, max_bucket=4)
+    buf = np.ones(dense.shape[1], np.float32)
+    t1 = svc.submit(mid, buf)
+    buf[:] = -5.0
+    t2 = svc.submit(mid, buf)
+    results = svc.flush()
+    np.testing.assert_allclose(results[t1].y,
+                               dense @ np.ones(dense.shape[1]),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(results[t2].y,
+                               dense @ np.full(dense.shape[1], -5.0),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_flush_requeues_on_dispatch_failure(monkeypatch):
+    """A backend failure mid-flush must not strand any queued request —
+    including those whose batch already dispatched (their results die with
+    the exception) — and must leave the stats as if the flush never ran."""
+    reg, mid_a, dense_a = make_registry(seed=19)
+    rng = np.random.default_rng(20)
+    rows = rng.integers(0, 48, 200)
+    cols = rng.integers(0, 56, 200)
+    vals = rng.normal(size=200).astype(np.float32)
+    mid_b = reg.put(rows, cols, vals, (48, 56))
+    dense_b = reg.get(mid_b).to_dense()
+    svc = SpMVService(reg, max_bucket=4)
+    xa = rng.normal(size=(2, 56)).astype(np.float32)
+    xb = rng.normal(size=(2, 56)).astype(np.float32)
+    ta = [svc.submit(mid_a, x) for x in xa]    # batch 1: dispatches fine
+    tb = [svc.submit(mid_b, x) for x in xb]    # batch 2: blows up
+    op_b = reg.get(mid_b)
+
+    def boom(*a, **kw):
+        raise RuntimeError("backend down")
+
+    monkeypatch.setattr(op_b, "matmat", boom)
+    with pytest.raises(RuntimeError, match="backend down"):
+        svc.flush()
+    assert svc.pending == 4                    # all four survived
+    assert svc.stats.batches == 0 and svc.stats.vectors == 0
+    assert svc.stats.stream_bytes == 0
+    monkeypatch.undo()
+    results = svc.flush()                      # retry serves everything
+    for t, x in zip(ta, xa):
+        np.testing.assert_allclose(results[t].y, dense_a @ x,
+                                   atol=1e-4, rtol=1e-4)
+    for t, x in zip(tb, xb):
+        np.testing.assert_allclose(results[t].y, dense_b @ x,
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_serve_convenience_preserves_order():
+    reg, mid, dense = make_registry(seed=14)
+    svc = SpMVService(reg, max_bucket=8)
+    rng = np.random.default_rng(15)
+    xs = rng.normal(size=(5, dense.shape[1])).astype(np.float32)
+    ys = svc.serve([(mid, x) for x in xs])
+    for y, x in zip(ys, xs):
+        np.testing.assert_allclose(y, dense @ x, atol=1e-4, rtol=1e-4)
