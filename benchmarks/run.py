@@ -9,7 +9,7 @@ import traceback
 def main() -> None:
     from benchmarks import (table3_large_matrices, fig3_suitesparse,
                             table5_scaling, table4_resources, roofline,
-                            serpens_kernel, serving)
+                            serpens_kernel, serving, channel_scaling)
     print("name,us_per_call,derived")
     suites = [
         ("table3", table3_large_matrices.run),
@@ -19,6 +19,7 @@ def main() -> None:
         ("serpens_kernel", serpens_kernel.run),
         ("roofline", roofline.run),
         ("serving", serving.run),
+        ("channel_scaling", channel_scaling.run),
     ]
     failures = 0
     for name, fn in suites:

@@ -8,7 +8,10 @@ paper's economics predict stream-bytes/vector ∝ 1/N (one A-stream amortized
 over N vectors); requests/s should rise until FLOPs/padding dominate.
 
 Emits the standard ``name,us_per_call,derived`` CSV rows.
+``--dry-run`` shrinks the matrix/burst for CI smoke runs.
 """
+import argparse
+
 import numpy as np
 
 from benchmarks.common import time_call, emit
@@ -23,19 +26,25 @@ BURST = 32                      # requests per replay
 BUCKETS = (1, 2, 4, 8, 16)
 
 
-def run():
-    rows, cols, vals = M.power_law_graph(N_VERTICES, NNZ, seed=7)
-    cfg = F.SerpensConfig(segment_width=8192, lanes=128)
+def run(dry_run: bool = False):
+    n = 2_000 if dry_run else N_VERTICES
+    nnz = 20_000 if dry_run else NNZ
+    burst = 8 if dry_run else BURST
+    buckets = (1, 4) if dry_run else BUCKETS
+    iters = 1 if dry_run else 3
+    rows, cols, vals = M.power_law_graph(n, nnz, seed=7)
+    cfg = (F.SerpensConfig(segment_width=512, lanes=16, sublanes=8)
+           if dry_run else F.SerpensConfig(segment_width=8192, lanes=128))
     registry = MatrixRegistry(config=cfg, backend="xla")
-    mid = registry.put(rows, cols, vals, (N_VERTICES, N_VERTICES))
+    mid = registry.put(rows, cols, vals, (n, n))
     op = registry.get(mid)
     rng = np.random.default_rng(1)
-    xs = rng.normal(size=(BURST, N_VERTICES)).astype(np.float32)
+    xs = rng.normal(size=(burst, n)).astype(np.float32)
     emit("serving/encode_s", registry.stats.encode_seconds * 1e6,
          f"stream_bytes={op.stream_bytes}")
 
     prev_bpv = float("inf")
-    for bucket in BUCKETS:
+    for bucket in buckets:
         svc = SpMVService(registry, max_bucket=bucket, backend="xla")
 
         def replay():
@@ -43,10 +52,10 @@ def run():
                 svc.submit(mid, x)
             return [r.y for r in svc.flush().values()]
 
-        sec = time_call(replay, warmup=1, iters=3)
-        rps = BURST / sec
+        sec = time_call(replay, warmup=1, iters=iters)
+        rps = burst / sec
         bpv = svc.stats.amortized_bytes_per_vector
-        emit(f"serving/bucket{bucket:02d}", sec / BURST * 1e6,
+        emit(f"serving/bucket{bucket:02d}", sec / burst * 1e6,
              f"req_per_s={rps:.1f};stream_bytes_per_vec={bpv:.0f}")
         assert bpv <= prev_bpv + 1e-6, (
             f"amortization must not regress with bucket size: "
@@ -55,5 +64,9 @@ def run():
 
 
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="small matrix + burst (CI smoke)")
+    args = ap.parse_args()
     print("name,us_per_call,derived")
-    run()
+    run(dry_run=args.dry_run)

@@ -7,12 +7,32 @@ one of the moved symbols imports it from here.
 """
 from __future__ import annotations
 
+import inspect
+
 import jax
 
 try:
-    shard_map = jax.shard_map
+    _shard_map = jax.shard_map
 except AttributeError:                      # jax < 0.4.38
-    from jax.experimental.shard_map import shard_map  # type: ignore # noqa
+    from jax.experimental.shard_map import shard_map as _shard_map  # type: ignore # noqa
+
+_SHARD_MAP_PARAMS = inspect.signature(_shard_map).parameters
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_rep=True):
+    """``shard_map`` with the replication-check flag normalized.
+
+    The flag was renamed ``check_rep`` -> ``check_vma`` (jax >= 0.6);
+    callers that shard a ``pallas_call`` body must disable it (no
+    replication rule), so route to whichever spelling this jax accepts.
+    """
+    kw = {}
+    if "check_rep" in _SHARD_MAP_PARAMS:
+        kw["check_rep"] = check_rep
+    elif "check_vma" in _SHARD_MAP_PARAMS:
+        kw["check_vma"] = check_rep
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
 
 
 def cost_analysis(compiled) -> dict:

@@ -1,154 +1,37 @@
 """Distributed Serpens SpMV — the multi-device scaling path.
 
-The paper scales by adding HBM channels (Sec. 4.4, 16 → 24 channels, Table 5).
-On a TPU mesh the analogous scaling axes are *chips*, and the two natural
-partitions mirror the paper's channel-allocation discussion:
-
-  * ``row`` partition ("more channels for A, disjoint accumulators"):
-    each device owns a contiguous row block and its own Serpens stream;
-    x is replicated (it is tiny relative to A — the paper's observation
-    that SpMV vectors deserve few channels); outputs concatenate. No
-    inter-device reduction at all — the exact analogue of the paper's
-    disjoint-URAM-per-PE design, lifted one level up the hierarchy.
-
-  * ``col`` partition (segments sharded): each device streams the non-zeros
-    of its column range and produces a *partial* full-length y; a psum
-    (all-reduce) combines. Used when x itself must be sharded (very large K).
-
-Both are built with ``shard_map`` over a named mesh axis so they compose with
-the data/model axes of the training mesh.
+The paper scales by adding HBM channels (Sec. 4.4, 16 → 24 channels, Table
+5).  On a TPU mesh the analogous scaling axes are *chips*.  This used to be
+a separate implementation; it is now a thin wrapper that builds a
+channel-shard plan (:mod:`repro.core.partition`) over the mesh axis and
+executes it through the same :class:`~repro.core.spmv.SerpensOperator` as
+the single-device path — so the aux spill stream, both backends, and matmat
+all work sharded.
 """
 from __future__ import annotations
 
-import functools
-
-import numpy as np
-import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-
-from repro import compat
 from repro.core import format as sformat
-from repro.kernels import ops
+from repro.core import partition as cpart
+from repro.core.spmv import SerpensOperator
 
 
-def _pad_stack(mats: list[sformat.SerpensMatrix]):
-    """Stack per-device streams, padding to a common tile count."""
-    cfg = mats[0].config
-    tmax = max(m.num_tiles for m in mats)
-    tmax = -(-tmax // cfg.tiles_per_chunk) * cfg.tiles_per_chunk
-    idx, val, seg = [], [], []
-    for m in mats:
-        pad = tmax - m.num_tiles
-        idx.append(np.concatenate(
-            [m.idx, np.full((pad,) + m.idx.shape[1:], sformat.SENTINEL,
-                            np.int32)]))
-        val.append(np.concatenate(
-            [m.val, np.zeros((pad,) + m.val.shape[1:], np.float32)]))
-        seg.append(np.concatenate(
-            [m.seg_ids, np.zeros((pad,), np.int32)]))
-    return (np.stack(idx), np.stack(val), np.stack(seg))
+class ShardedSerpensSpMV(SerpensOperator):
+    """Row- or column-partitioned SpMV over one mesh axis.
 
-
-class ShardedSerpensSpMV:
-    """Row- or column-partitioned SpMV over one mesh axis."""
+      * ``row``: each device owns a contiguous row block and its own stream;
+        x is replicated; outputs concatenate (no inter-device reduction).
+      * ``col``: segments sharded; each device produces a partial full-length
+        y; a ``psum`` combines (for very large K where x must shard).
+    """
 
     def __init__(self, rows, cols, vals, shape, mesh, axis: str,
                  partition: str = "row",
-                 config: sformat.SerpensConfig = sformat.SerpensConfig()):
+                 config: sformat.SerpensConfig = sformat.SerpensConfig(),
+                 backend: str = "auto"):
         if partition not in ("row", "col"):
             raise ValueError("partition must be 'row' or 'col'")
-        self.mesh = mesh
-        self.axis = axis
+        plan = cpart.make_plan(
+            rows, cols, vals, shape, config,
+            cpart.PlanSpec(partition, mesh.shape[axis]))
+        super().__init__(plan, mesh=mesh, axis=axis, backend=backend)
         self.partition = partition
-        self.config = config
-        self.shape = tuple(shape)
-        n = mesh.shape[axis]
-        m, k = shape
-        rows = np.asarray(rows, np.int64)
-        cols = np.asarray(cols, np.int64)
-        vals = np.asarray(vals, np.float32)
-
-        parts = []
-        if partition == "row":
-            # Contiguous row blocks, locally re-indexed.
-            self.block_m = -(-m // n)
-            # Pad block_m to a lane multiple so concatenation is exact.
-            self.block_m = -(-self.block_m // config.lanes) * config.lanes
-            for d in range(n):
-                lo, hi = d * self.block_m, min((d + 1) * self.block_m, m)
-                sel = (rows >= lo) & (rows < hi)
-                parts.append(sformat.encode(
-                    rows[sel] - lo, cols[sel], vals[sel],
-                    (self.block_m, k), config))
-            self.out_rows_padded = parts[0].padded_rows
-        else:
-            # Contiguous column (segment) blocks; x sharded, y psum'd.
-            w = config.segment_width
-            segs_total = max(1, -(-k // w))
-            self.segs_per_dev = -(-segs_total // n)
-            self.block_k = self.segs_per_dev * w
-            for d in range(n):
-                lo, hi = d * self.block_k, min((d + 1) * self.block_k, k)
-                sel = (cols >= lo) & (cols < hi)
-                parts.append(sformat.encode(
-                    rows[sel], cols[sel] - lo, vals[sel],
-                    (m, self.block_k), config))
-            self.out_rows_padded = parts[0].padded_rows
-        self.num_segments_local = max(p.num_segments for p in parts)
-        # All parts must agree on segment count for a uniform x reshape.
-        for p in parts:
-            p.num_segments = self.num_segments_local
-        idx, val, seg = _pad_stack(parts)
-        spec = jax.NamedSharding(mesh, P(axis))
-        self.idx = jax.device_put(idx, spec)
-        self.val = jax.device_put(val, spec)
-        self.seg_ids = jax.device_put(seg, spec)
-        self.nnz = int(sum(p.nnz for p in parts))
-        self.padded_slots = int(idx.size)
-
-    def __call__(self, x, alpha=1.0, beta=0.0, y=None):
-        m, k = self.shape
-        cfg = self.config
-        kp_local = self.num_segments_local * cfg.segment_width
-
-        if self.partition == "row":
-            xp = ops.pad_x(jnp.asarray(x), self.num_segments_local,
-                           cfg.segment_width)
-
-            def body(idx, val, seg, xv):
-                acc = ops.spmv_stream_xla(
-                    idx[0], val[0], seg[0], xv,
-                    num_rows_padded=self.out_rows_padded,
-                    segment_width=cfg.segment_width)
-                return acc[None]
-
-            f = compat.shard_map(
-                body, mesh=self.mesh,
-                in_specs=(P(self.axis), P(self.axis), P(self.axis), P()),
-                out_specs=P(self.axis))
-            acc = f(self.idx, self.val, self.seg_ids, xp).reshape(-1)
-            acc = acc.reshape(-1, self.out_rows_padded)[:, :self.block_m]
-            acc = acc.reshape(-1)[:m]
-        else:
-            n = self.mesh.shape[self.axis]
-            xp = jnp.pad(jnp.asarray(x, jnp.float32),
-                         (0, n * kp_local - x.shape[0]))
-
-            def body(idx, val, seg, xv):
-                acc = ops.spmv_stream_xla(
-                    idx[0], val[0], seg[0], xv.reshape(-1),
-                    num_rows_padded=self.out_rows_padded,
-                    segment_width=cfg.segment_width)
-                return jax.lax.psum(acc, self.axis)
-
-            f = compat.shard_map(
-                body, mesh=self.mesh,
-                in_specs=(P(self.axis), P(self.axis), P(self.axis),
-                          P(self.axis)),
-                out_specs=P())
-            acc = f(self.idx, self.val, self.seg_ids, xp)[:m]
-
-        if y is None:
-            y = jnp.zeros((m,), jnp.float32)
-        return alpha * acc + beta * jnp.asarray(y, jnp.float32)

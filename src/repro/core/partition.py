@@ -1,0 +1,227 @@
+"""Channel-shard execution plans — the paper's scaling axis as a data type.
+
+Serpens scales by adding HBM channels (Sec. 4.4, 16 -> 24 channels, Table 5):
+the non-zero stream is split across channels while x stays cheap to
+replicate.  On a TPU mesh the analogous "channel" is a chip; on one device a
+multi-shard plan still describes how the stream traffic divides.  This module
+turns that idea into an explicit plan object consumed by one executor
+(:class:`repro.core.spmv.SerpensOperator`) instead of a separate code path:
+
+  * ``row`` partition ("more channels for A, disjoint accumulators"): each
+    shard owns a contiguous, lane-aligned row block with its own Serpens
+    stream; x is replicated (it is tiny relative to A — the paper's
+    observation that the vectors deserve few channels); outputs concatenate
+    with no inter-shard reduction — the paper's disjoint-URAM-per-PE design
+    lifted one level up the hierarchy.
+
+  * ``col`` partition (segments sharded): each shard streams the non-zeros
+    of its column range and produces a *partial* full-length y; a sum
+    (``psum`` under a mesh) combines.  Used when x itself must be sharded
+    (very large K).
+
+  * ``single``: the degenerate one-shard plan — the classic ``SerpensSpMV``.
+
+Every shard is a full :class:`~repro.core.format.SerpensMatrix`, so the
+hot-row spill side-stream (aux COO) survives partitioning: each shard keeps
+the spills of its own block, and the executor applies the epilogue per shard
+before combining.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import format as sformat
+
+PARTITIONS = ("single", "row", "col")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanSpec:
+    """Partition geometry: how a matrix splits into channel shards."""
+
+    partition: str = "single"
+    num_shards: int = 1
+
+    def __post_init__(self):
+        if self.partition not in PARTITIONS:
+            raise ValueError(
+                f"partition must be one of {PARTITIONS}, got "
+                f"{self.partition!r}")
+        if self.num_shards < 1:
+            raise ValueError("num_shards must be >= 1")
+        if self.partition == "single" and self.num_shards != 1:
+            raise ValueError("'single' plans have exactly one shard")
+
+
+@dataclasses.dataclass
+class ChannelShardPlan:
+    """1..N per-channel Serpens streams plus the geometry to combine them.
+
+    ``shards[d]`` is the d-th channel's :class:`SerpensMatrix` in *local*
+    coordinates (row partition: rows offset by ``d * block_m``; col
+    partition: cols offset by ``d * block_k``).  The stacked arrays pad all
+    shards to a common tile count / aux length so they can be ``shard_map``'d
+    over a mesh axis as one array with leading dim ``num_shards``.
+    """
+
+    shape: tuple[int, int]          # global (M, K)
+    config: sformat.SerpensConfig
+    spec: PlanSpec
+    shards: list[sformat.SerpensMatrix]
+    block_m: int                    # rows per shard (row partition)
+    block_k: int                    # cols per shard (col partition)
+    num_segments_local: int         # x segments per shard (uniform)
+    # Stacked host arrays, leading dim = num_shards:
+    idx: np.ndarray                 # int32 [N, T, SUB, LANES]
+    val: np.ndarray                 # float32 [N, T, SUB, LANES]
+    seg_ids: np.ndarray             # int32 [N, T]
+    aux_rows: np.ndarray            # int32 [N, A] (A = max aux len, 0-padded)
+    aux_cols: np.ndarray            # int32 [N, A]
+    aux_vals: np.ndarray            # float32 [N, A]
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def out_rows_padded(self) -> int:
+        """Accumulator length of each shard (identical across shards)."""
+        return self.shards[0].padded_rows
+
+    @property
+    def nnz(self) -> int:
+        return int(sum(sm.nnz for sm in self.shards))
+
+    @property
+    def n_aux(self) -> int:
+        return int(sum(sm.n_aux for sm in self.shards))
+
+    @property
+    def stream_bytes(self) -> int:
+        """Off-chip bytes for one pass over all shards, including the
+        cross-shard tile padding (8 B/slot) and spilled aux COO entries."""
+        return int(self.idx.size) * 8 + 12 * self.n_aux
+
+    @property
+    def padding_ratio(self) -> float:
+        total = self.idx.size
+        kept = self.nnz - self.n_aux
+        return float(total - kept) / max(total, 1)
+
+    def to_coo(self):
+        """Recover global COO triples from all shards (order deterministic)."""
+        rs, cs, vs = [], [], []
+        for d, sm in enumerate(self.shards):
+            r, c, v = sformat.decode_to_coo(sm)
+            if self.spec.partition == "row":
+                r = r + d * self.block_m
+            elif self.spec.partition == "col":
+                c = c + d * self.block_k
+            rs.append(r)
+            cs.append(c)
+            vs.append(v)
+        return (np.concatenate(rs), np.concatenate(cs), np.concatenate(vs))
+
+
+def _pad_stack(mats: list[sformat.SerpensMatrix]):
+    """Stack per-shard streams, padding to a common tile count.
+
+    Padded tail tiles carry the shard's *last* segment id (matching
+    ``encode``'s own chunk-alignment padding): padding with 0 would force a
+    spurious re-stage of segment 0 — and break the ascending-seg invariant —
+    on every shard shorter than the longest one.
+    """
+    cfg = mats[0].config
+    tmax = max(m.num_tiles for m in mats)
+    tmax = -(-tmax // cfg.tiles_per_chunk) * cfg.tiles_per_chunk
+    idx, val, seg = [], [], []
+    for m in mats:
+        pad = tmax - m.num_tiles
+        idx.append(np.concatenate(
+            [m.idx, np.full((pad,) + m.idx.shape[1:], sformat.SENTINEL,
+                            np.int32)]))
+        val.append(np.concatenate(
+            [m.val, np.zeros((pad,) + m.val.shape[1:], np.float32)]))
+        seg.append(np.concatenate(
+            [m.seg_ids, np.full((pad,), m.seg_ids[-1], np.int32)]))
+    return (np.stack(idx), np.stack(val), np.stack(seg))
+
+
+def _stack_aux(mats: list[sformat.SerpensMatrix]):
+    """Stack aux spill streams, 0-padding to a common length.
+
+    Padding entries are (row 0, col 0, val 0.0): the epilogue scatter-add
+    contributes exactly 0 for them.
+    """
+    amax = max(m.n_aux for m in mats)
+    rows = np.zeros((len(mats), amax), np.int32)
+    cols = np.zeros((len(mats), amax), np.int32)
+    vals = np.zeros((len(mats), amax), np.float32)
+    for d, m in enumerate(mats):
+        if m.n_aux:
+            rows[d, :m.n_aux] = m.aux_rows
+            cols[d, :m.n_aux] = m.aux_cols
+            vals[d, :m.n_aux] = m.aux_vals
+    return rows, cols, vals
+
+
+def make_plan(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    vals: np.ndarray,
+    shape: tuple[int, int],
+    config: sformat.SerpensConfig = sformat.SerpensConfig(),
+    spec: PlanSpec = PlanSpec(),
+) -> ChannelShardPlan:
+    """Split a COO matrix into a channel-shard plan and encode every shard."""
+    m, k = shape
+    rows = np.asarray(rows, np.int64)
+    cols = np.asarray(cols, np.int64)
+    vals = np.asarray(vals, np.float32)
+    if rows.shape != cols.shape or rows.shape != vals.shape:
+        raise ValueError("rows/cols/vals must have identical shapes")
+    if rows.size and (rows.min() < 0 or rows.max() >= m):
+        raise ValueError("row index out of range")
+    if cols.size and (cols.min() < 0 or cols.max() >= k):
+        raise ValueError("col index out of range")
+    cfg = config
+    n = spec.num_shards
+    w = cfg.segment_width
+
+    shards: list[sformat.SerpensMatrix] = []
+    block_m, block_k = m, k
+    if spec.partition == "single":
+        shards.append(sformat.encode(rows, cols, vals, shape, cfg))
+    elif spec.partition == "row":
+        # Contiguous row blocks, locally re-indexed; block_m is a lane
+        # multiple so shard accumulators concatenate exactly.
+        block_m = -(-m // n)
+        block_m = -(-block_m // cfg.lanes) * cfg.lanes
+        for d in range(n):
+            lo = d * block_m
+            sel = (rows >= lo) & (rows < lo + block_m)
+            shards.append(sformat.encode(
+                rows[sel] - lo, cols[sel], vals[sel], (block_m, k), cfg))
+    else:  # col
+        # Contiguous column (segment) blocks; x shards, partial y's sum.
+        segs_total = max(1, -(-k // w))
+        block_k = -(-segs_total // n) * w
+        for d in range(n):
+            lo = d * block_k
+            sel = (cols >= lo) & (cols < lo + block_k)
+            shards.append(sformat.encode(
+                rows[sel], cols[sel] - lo, vals[sel], (m, block_k), cfg))
+
+    # All shards must agree on segment count for a uniform x reshape.
+    num_segments = max(sm.num_segments for sm in shards)
+    for sm in shards:
+        sm.num_segments = num_segments
+    idx, val, seg_ids = _pad_stack(shards)
+    aux_r, aux_c, aux_v = _stack_aux(shards)
+    return ChannelShardPlan(
+        shape=(m, k), config=cfg, spec=spec, shards=shards,
+        block_m=block_m, block_k=block_k, num_segments_local=num_segments,
+        idx=idx, val=val, seg_ids=seg_ids,
+        aux_rows=aux_r, aux_cols=aux_c, aux_vals=aux_v)

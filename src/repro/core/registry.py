@@ -1,13 +1,18 @@
-"""Content-addressed cache of encoded Serpens matrices — the serving tier's
-matrix store.
+"""Content-addressed cache of encoded channel-shard plans — the serving
+tier's matrix store.
 
 The paper's format conversion (``format.encode``) is the expensive host-side
-step: per-lane scheduling over every segment.  A serving system that re-ran it
-per request would be bottlenecked on preprocessing, not on the accelerator.
-``MatrixRegistry`` amortizes it: matrices are keyed by a content hash of their
-COO triples + geometry, encoded exactly once, and the resulting
-:class:`~repro.core.spmv.SerpensSpMV` operator (host stream + device arrays)
-is kept resident until a byte-budget LRU evicts it.
+step: per-lane scheduling over every segment.  A serving system that re-ran
+it per request would be bottlenecked on preprocessing, not on the
+accelerator.  ``MatrixRegistry`` amortizes it: matrices are keyed by a
+content hash of their COO triples + geometry (Serpens config *and*
+partition spec — a 4-shard row plan is a different stream layout than a
+single-shard one), encoded exactly once into a
+:class:`~repro.core.partition.ChannelShardPlan`, and kept resident until a
+byte-budget LRU evicts them.  ``get`` hands back a ready-to-run
+:class:`~repro.core.spmv.SerpensOperator`; pass a mesh to get the same plan
+bound to a mesh axis (``shard_map`` execution), with the mesh binding — and
+any on-demand repartition to match the axis size — cached per entry.
 
 This mirrors the deployment model of HBM SpMV accelerators (Serpens,
 Parravicini et al.'s Top-K SpMV): the sparse matrix is *resident* on the
@@ -24,37 +29,41 @@ from collections import OrderedDict
 import numpy as np
 
 from repro.core import format as sformat
-from repro.core.spmv import SerpensSpMV
+from repro.core import partition as cpart
+from repro.core.spmv import SerpensOperator
 
 
-def content_key(rows, cols, vals, shape,
-                config: sformat.SerpensConfig) -> str:
-    """Deterministic id for (COO triples, shape, geometry).
+def content_key(rows, cols, vals, shape, config: sformat.SerpensConfig,
+                spec: cpart.PlanSpec = cpart.PlanSpec()) -> str:
+    """Deterministic id for (COO triples, shape, geometry, partition).
 
     Element *order* is part of the key: duplicates are legal in COO and the
     stream layout depends on input order, so two orderings are two streams.
     """
     h = hashlib.sha256()
-    h.update(repr((tuple(int(s) for s in shape), config)).encode())
+    h.update(repr((tuple(int(s) for s in shape), config,
+                   (spec.partition, spec.num_shards))).encode())
     for arr, dt in ((rows, np.int64), (cols, np.int64), (vals, np.float32)):
         a = np.ascontiguousarray(np.asarray(arr, dtype=dt))
         h.update(a.tobytes())
     return h.hexdigest()[:16]
 
 
-def stream_key(sm: sformat.SerpensMatrix) -> str:
-    """Deterministic id for an already-encoded stream (``put_operator``).
+def stream_key(plan: cpart.ChannelShardPlan) -> str:
+    """Deterministic id for an already-encoded plan (``put_operator``).
 
-    Keyed on the stream arrays themselves, so it lives in a different id
-    namespace than :func:`content_key` (prefix ``s``): entries adopted via
-    ``put_operator`` dedupe against each other, not against ``put`` entries.
+    Keyed on the stacked stream arrays themselves, so it lives in a
+    different id namespace than :func:`content_key` (prefix ``s``): entries
+    adopted via ``put_operator`` dedupe against each other, not against
+    ``put`` entries.
     """
     h = hashlib.sha256()
-    h.update(repr((tuple(int(x) for x in sm.shape), sm.config)).encode())
-    for a in (sm.idx, sm.val, sm.seg_ids):
+    h.update(repr((tuple(int(x) for x in plan.shape), plan.config,
+                   (plan.spec.partition, plan.spec.num_shards))).encode())
+    for a in (plan.idx, plan.val, plan.seg_ids):
         h.update(np.ascontiguousarray(a).tobytes())
-    if sm.n_aux:
-        for a in (sm.aux_rows, sm.aux_cols, sm.aux_vals):
+    if plan.n_aux:
+        for a in (plan.aux_rows, plan.aux_cols, plan.aux_vals):
             h.update(np.ascontiguousarray(a).tobytes())
     return "s" + h.hexdigest()[:15]
 
@@ -75,15 +84,22 @@ class RegistryStats:
 
 @dataclasses.dataclass
 class _Entry:
-    op: SerpensSpMV
-    content: str        # content hash — detects reuse of an explicit id
+    content: str                    # content hash — detects id reuse
+    primary: cpart.PlanSpec         # geometry the entry was put with
+    backend: str                    # backend chosen at put time
+    plans: dict                     # PlanSpec -> ChannelShardPlan
+    ops: dict                       # (PlanSpec, mesh, axis) -> operator
+
+    @property
+    def stream_bytes(self) -> int:
+        return sum(p.stream_bytes for p in self.plans.values())
 
 
 class MatrixRegistry:
-    """LRU cache of ready-to-run Serpens operators, bounded by stream bytes.
+    """LRU cache of ready-to-run channel-shard plans, bounded by stream bytes.
 
-    ``byte_budget`` caps the sum of ``stream_bytes`` over cached entries
-    (the off-chip footprint of the encoded streams, the quantity the paper's
+    ``byte_budget`` caps the sum of ``stream_bytes`` over cached plans (the
+    off-chip footprint of the encoded streams, the quantity the paper's
     bandwidth model is written in).  When an insert pushes the total over
     budget, least-recently-used entries are evicted — except the entry being
     inserted, so a single over-budget matrix still serves (with a warning in
@@ -129,17 +145,21 @@ class MatrixRegistry:
 
     # -- core API ---------------------------------------------------------
     def put(self, rows, cols, vals, shape, *, config=None, backend=None,
-            matrix_id: str | None = None) -> str:
-        """Ensure the matrix is cached; return its id.
+            matrix_id: str | None = None, partition: str = "single",
+            num_shards: int = 1) -> str:
+        """Ensure the matrix's plan is cached; return its id.
 
-        A repeat ``put`` of the same content is a *hit*: the encode does not
-        re-run.  Pass ``matrix_id`` to name the entry explicitly (e.g. a
-        model/layer path); otherwise the content hash is the id.  Re-using
-        an explicit id with *different* content replaces the entry (a miss)
-        rather than silently serving the stale matrix.
+        A repeat ``put`` of the same content + geometry is a *hit*: the
+        encode does not re-run.  ``partition``/``num_shards`` choose the
+        channel-shard geometry (part of the content key).  Pass
+        ``matrix_id`` to name the entry explicitly (e.g. a model/layer
+        path); otherwise the content hash is the id.  Re-using an explicit
+        id with *different* content replaces the entry (a miss) rather than
+        silently serving the stale matrix.
         """
         cfg = config or self.default_config
-        ck = content_key(rows, cols, vals, shape, cfg)
+        spec = cpart.PlanSpec(partition, num_shards)
+        ck = content_key(rows, cols, vals, shape, cfg, spec)
         key = matrix_id or ck
         with self._lock:
             entry = self._entries.get(key)
@@ -148,9 +168,10 @@ class MatrixRegistry:
                 self._entries.move_to_end(key)
                 return key
         # Encode outside the lock — it is the slow part and pure.
+        be = backend or self.default_backend
         t0 = time.perf_counter()
-        op = SerpensSpMV(rows, cols, vals, shape, cfg,
-                         backend or self.default_backend)
+        plan = cpart.make_plan(rows, cols, vals, shape, cfg, spec)
+        op = SerpensOperator(plan, backend=be)
         dt = time.perf_counter() - t0
         with self._lock:
             self.stats.encode_seconds += dt
@@ -162,12 +183,14 @@ class MatrixRegistry:
                 return key
             if entry is not None:          # same name, new content: replace
                 del self._entries[key]
-                self._bytes -= entry.op.stream_bytes
+                self._bytes -= entry.stream_bytes
             self.stats.misses += 1
-            self._insert(key, _Entry(op, ck))
+            self._insert(key, _Entry(content=ck, primary=spec, backend=be,
+                                     plans={spec: plan},
+                                     ops={(spec, None, None): op}))
         return key
 
-    def put_operator(self, op: SerpensSpMV,
+    def put_operator(self, op: SerpensOperator,
                      matrix_id: str | None = None) -> str:
         """Adopt an already-built operator (counts as a miss, no encode).
 
@@ -175,8 +198,9 @@ class MatrixRegistry:
         operator whose triples were also ``put`` directly gets its own entry
         (the COO input order that produced it is unknown here).
         """
-        ck = stream_key(op.host)
+        ck = stream_key(op.plan)
         key = matrix_id or ck
+        spec = op.plan.spec
         with self._lock:
             entry = self._entries.get(key)
             if entry is not None and entry.content == ck:
@@ -185,13 +209,26 @@ class MatrixRegistry:
             else:
                 if entry is not None:
                     del self._entries[key]
-                    self._bytes -= entry.op.stream_bytes
+                    self._bytes -= entry.stream_bytes
                 self.stats.misses += 1
-                self._insert(key, _Entry(op, ck))
+                self._insert(key, _Entry(
+                    content=ck, primary=spec, backend=op.backend,
+                    plans={spec: op.plan},
+                    ops={(spec, op.mesh, op.axis): op}))
         return key
 
-    def get(self, matrix_id: str) -> SerpensSpMV:
-        """Fetch a cached operator (refreshes LRU recency)."""
+    def get(self, matrix_id: str, *, mesh=None, axis: str | None = None,
+            partition: str | None = None) -> SerpensOperator:
+        """Fetch a ready operator (refreshes LRU recency).
+
+        Without a mesh, returns the operator for the geometry the entry was
+        put with.  With ``mesh``/``axis``, returns the plan bound to that
+        mesh axis: if the cached geometry does not match
+        ``(partition, mesh axis size)``, the entry is repartitioned once —
+        outside the lock, like ``put``'s encode — and the new plan cached
+        alongside.  Any cached 1-shard plan satisfies a 1-device axis
+        regardless of partition label (the streams are identical work).
+        """
         with self._lock:
             if matrix_id not in self._entries:
                 self.stats.misses += 1
@@ -199,13 +236,53 @@ class MatrixRegistry:
                                f"(cached: {len(self._entries)})")
             self.stats.hits += 1
             self._entries.move_to_end(matrix_id)
-            return self._entries[matrix_id].op
+            entry = self._entries[matrix_id]
+            if mesh is None:
+                if partition is not None:
+                    raise ValueError(
+                        "partition requires a mesh; without one, get() "
+                        "returns the geometry the entry was put with")
+                return self._bind(entry, entry.plans[entry.primary],
+                                  entry.primary, None, None)
+            if axis is None:
+                raise ValueError("mesh requires axis")
+            part = partition or (
+                entry.primary.partition
+                if entry.primary.partition != "single" else "row")
+            spec = cpart.PlanSpec(part, mesh.shape[axis])
+            plan = self._find_plan(entry, spec)
+            if plan is not None:
+                return self._bind(entry, plan, spec, mesh, axis)
+            src = entry.plans[entry.primary]
+            content = entry.content
+        # Repartition outside the lock — the slow host-side encode must not
+        # stall concurrent submit/get/put on the serving tier.
+        t0 = time.perf_counter()
+        r, c, v = src.to_coo()
+        plan = cpart.make_plan(r, c, v, src.shape, src.config, spec)
+        dt = time.perf_counter() - t0
+        with self._lock:
+            self.stats.encode_seconds += dt
+            self.stats.encodes += 1
+            entry = self._entries.get(matrix_id)
+            if entry is None or entry.content != content:
+                # Entry evicted/replaced mid-encode: serve uncached.
+                return SerpensOperator(plan, mesh=mesh, axis=axis,
+                                       backend=self.default_backend)
+            cached = self._find_plan(entry, spec)
+            if cached is not None:
+                plan = cached              # raced with another thread
+            else:
+                entry.plans[spec] = plan
+                self._bytes += plan.stream_bytes
+                self._evict_over_budget(keep=matrix_id)
+            return self._bind(entry, plan, spec, mesh, axis)
 
     def evict(self, matrix_id: str) -> None:
         with self._lock:
             entry = self._entries.pop(matrix_id, None)
             if entry is not None:
-                self._bytes -= entry.op.stream_bytes
+                self._bytes -= entry.stream_bytes
                 self.stats.evictions += 1
 
     def clear(self) -> None:
@@ -215,14 +292,44 @@ class MatrixRegistry:
             self._bytes = 0
 
     # -- internals --------------------------------------------------------
+    @staticmethod
+    def _find_plan(entry: _Entry, spec: cpart.PlanSpec):
+        """A cached plan satisfying ``spec`` (1-shard plans interchange)."""
+        plan = entry.plans.get(spec)
+        if plan is None and spec.num_shards == 1:
+            plan = next((p for p in entry.plans.values()
+                         if p.num_shards == 1), None)
+        return plan
+
+    def _bind(self, entry: _Entry, plan, spec, mesh, axis
+              ) -> SerpensOperator:
+        """Cached mesh binding of a plan (caller holds the lock).
+
+        Bindings live for the entry's lifetime: one operator per distinct
+        (spec, mesh, axis), holding device copies of the plan's streams.
+        The byte budget tracks host plan bytes only — with many distinct
+        long-lived meshes, evict entries explicitly to release device
+        buffers.
+        """
+        op = entry.ops.get((spec, mesh, axis))
+        if op is None:
+            op = SerpensOperator(plan, mesh=mesh, axis=axis,
+                                 backend=entry.backend)
+            entry.ops[(spec, mesh, axis)] = op
+        return op
+
     def _insert(self, key: str, entry: _Entry) -> None:
         """Insert + LRU-evict down to budget (caller holds the lock)."""
         self._entries[key] = entry
-        self._bytes += entry.op.stream_bytes
+        self._bytes += entry.stream_bytes
+        self._evict_over_budget(keep=key)
+
+    def _evict_over_budget(self, keep: str) -> None:
+        """LRU-evict until within budget, never evicting ``keep``."""
         while self._bytes > self.byte_budget and len(self._entries) > 1:
             old_key, old = next(iter(self._entries.items()))
-            if old_key == key:
-                break  # never evict the entry just inserted
+            if old_key == keep:
+                break  # never evict the entry just inserted/extended
             del self._entries[old_key]
-            self._bytes -= old.op.stream_bytes
+            self._bytes -= old.stream_bytes
             self.stats.evictions += 1

@@ -1,51 +1,113 @@
 """Public SpMV API: ``y = alpha * A @ x + beta * y`` with Serpens-formatted A.
 
 This is the paper's contract (Sec. 1) including the CompY (α, β) epilogue.
-``SerpensSpMV`` is the device-side operator: construct once from a COO matrix
-(preprocessing runs on host, exactly like the paper's offline format
-conversion), then apply to as many vectors as you like.
+Execution is organized around a channel-shard plan
+(:mod:`repro.core.partition`): :class:`SerpensOperator` runs *any* plan —
+one shard or many, on one device or ``shard_map``'d over a mesh axis,
+matvec or matmat, XLA or Pallas — through the single dispatch point
+``kernels/ops.run_stream``, with the hot-row aux-spill epilogue applied
+uniformly per shard.  :class:`SerpensSpMV` is the classic single-shard
+operator as a thin wrapper (preprocessing runs on host, exactly like the
+paper's offline format conversion; construct once, apply to many vectors).
 """
 from __future__ import annotations
+
+import functools
 
 import numpy as np
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import format as sformat
+from repro.core import partition as cpart
 from repro.kernels import ops
 
 
-class SerpensSpMV:
-    """y = α·A·x + β·y for a fixed sparse A in Serpens stream format."""
+class SerpensOperator:
+    """y = α·A·x + β·y for a fixed sparse A under a channel-shard plan.
 
-    def __init__(self, rows, cols, vals, shape,
-                 config: sformat.SerpensConfig = sformat.SerpensConfig(),
-                 backend: str = "auto"):
-        self.host = sformat.encode(rows, cols, vals, shape, config)
-        self.config = config
-        self.shape = tuple(shape)
+    With ``mesh``/``axis`` the shards execute in parallel under
+    ``shard_map`` (row partition: disjoint accumulators concatenate; col
+    partition: partial y's ``psum``).  Without a mesh a multi-shard plan
+    executes shard-by-shard on the local device — the same math, used for
+    parity tests and single-host channel-scaling sweeps.
+    """
+
+    def __init__(self, plan: cpart.ChannelShardPlan, *, mesh=None,
+                 axis: str | None = None, backend: str = "auto"):
+        if (mesh is None) != (axis is None):
+            raise ValueError("mesh and axis must be given together")
+        self.plan = plan
+        self.config = plan.config
+        self.shape = tuple(plan.shape)
         self.backend = backend
-        (self.idx, self.val, self.seg_ids_tile,
-         self.seg_ids_chunk) = ops.device_arrays(self.host)
-        if self.host.n_aux:
-            self.aux = (jnp.asarray(self.host.aux_rows),
-                        jnp.asarray(self.host.aux_cols),
-                        jnp.asarray(self.host.aux_vals))
+        self.mesh = mesh
+        self.axis = axis
+        cfg = plan.config
+        if mesh is not None:
+            n = mesh.shape[axis]
+            if n != plan.num_shards:
+                raise ValueError(
+                    f"plan has {plan.num_shards} shards but mesh axis "
+                    f"{axis!r} has {n} devices")
+            sh = jax.NamedSharding(mesh, P(axis))
+            self._idx = jax.device_put(plan.idx, sh)
+            self._val = jax.device_put(plan.val, sh)
+            self._seg = jax.device_put(plan.seg_ids, sh)
+            self._seg_chunk = jax.device_put(
+                plan.seg_ids[:, ::cfg.tiles_per_chunk], sh)
+            self._aux = tuple(jax.device_put(a, sh) for a in
+                              (plan.aux_rows, plan.aux_cols, plan.aux_vals))
         else:
-            self.aux = None
+            self._shards = [ops.device_arrays(sm) for sm in plan.shards]
+            self._auxs = [
+                (jnp.asarray(sm.aux_rows), jnp.asarray(sm.aux_cols),
+                 jnp.asarray(sm.aux_vals)) if sm.n_aux else None
+                for sm in plan.shards]
 
     # -- properties -------------------------------------------------------
     @property
     def nnz(self) -> int:
-        return self.host.nnz
+        return self.plan.nnz
 
     @property
     def stream_bytes(self) -> int:
-        return self.host.stream_bytes
+        return self.plan.stream_bytes
 
     @property
     def padding_ratio(self) -> float:
-        return self.host.padding_ratio
+        return self.plan.padding_ratio
+
+    @property
+    def padded_slots(self) -> int:
+        return int(self.plan.idx.size)
+
+    def with_mesh(self, mesh, axis: str, partition: str | None = None
+                  ) -> "SerpensOperator":
+        """Rebind this operator's plan to a mesh axis.
+
+        Reuses the encoded plan when its shard count matches the axis size;
+        otherwise repartitions from the plan's COO (a host-side re-encode —
+        prefer :meth:`MatrixRegistry.get` with a mesh, which caches the
+        repartitioned plan).
+        """
+        if mesh is None:
+            return self
+        if axis is None:
+            raise ValueError("mesh requires axis")
+        n = mesh.shape[axis]
+        plan = self.plan
+        want = partition or (plan.spec.partition
+                             if plan.spec.partition != "single" else "row")
+        # Any 1-shard plan already is the 1-device stream — no re-encode.
+        if plan.num_shards != n or (n > 1 and plan.spec.partition != want):
+            r, c, v = plan.to_coo()
+            plan = cpart.make_plan(r, c, v, self.shape, self.config,
+                                   cpart.PlanSpec(want, n))
+        return SerpensOperator(plan, mesh=mesh, axis=axis,
+                               backend=self.backend)
 
     # -- compute ----------------------------------------------------------
     def _check_x(self, x, what: str):
@@ -57,25 +119,13 @@ class SerpensSpMV:
 
     def matvec(self, x, backend: str | None = None):
         """Raw A @ x (no epilogue)."""
-        m, k = self.shape
         x = jnp.asarray(x)
         if x.ndim != 1:
             raise ValueError(
                 f"matvec needs a 1-D x, got shape {tuple(x.shape)} "
                 f"(use matmat for multi-vector)")
         self._check_x(x, "x")
-        xp = ops.pad_x(x, self.host.num_segments,
-                       self.config.segment_width)
-        acc = ops.run_spmv(
-            self.idx, self.val, self.seg_ids_tile, self.seg_ids_chunk, xp,
-            num_rows_padded=self.host.padded_rows,
-            segment_width=self.config.segment_width,
-            tiles_per_chunk=self.config.tiles_per_chunk,
-            backend=backend or self.backend)
-        if self.aux is not None:
-            ar, ac, av = self.aux   # hot-row spill epilogue (§Perf C3)
-            acc = acc.at[ar].add(av * xp[ac])
-        return acc[:m]
+        return self._apply(x, backend or self.backend)
 
     def __call__(self, x, alpha=1.0, beta=0.0, y=None, backend=None):
         """The paper's full SpMV: y_out = α·A·x + β·y (CompY epilogue)."""
@@ -87,46 +137,112 @@ class SerpensSpMV:
 
     def matmat(self, x_mat, alpha=1.0, beta=0.0, y=None, backend=None):
         """Multi-vector SpMM (Sextans-style baseline / batched serving)."""
-        from repro.kernels import serpens_spmv as sk
-        m, k = self.shape
-        kp = self.host.num_segments * self.config.segment_width
-        x_mat = jnp.asarray(x_mat, jnp.float32)
+        x_mat = jnp.asarray(x_mat)
         if x_mat.ndim != 2:
             raise ValueError(
                 f"matmat needs a (K, N) matrix, got shape "
                 f"{tuple(x_mat.shape)}")
         self._check_x(x_mat, "x_mat")
-        xp = jnp.pad(x_mat, ((0, kp - x_mat.shape[0]), (0, 0)))
-        backend = backend or self.backend
-        if backend == "pallas" or (backend == "auto"
-                                   and jax.default_backend() == "tpu"):
-            x3d = xp.reshape(self.host.num_segments,
-                             self.config.segment_width, -1)
-            acc = sk.spmm_pallas(
-                self.idx, self.val, self.seg_ids_chunk, x3d,
-                num_rows_padded=self.host.padded_rows,
-                segment_width=self.config.segment_width,
-                tiles_per_chunk=self.config.tiles_per_chunk,
-                interpret=jax.default_backend() != "tpu")
-        else:
-            acc = ops.spmm_stream_xla(
-                self.idx, self.val, self.seg_ids_tile, xp,
-                num_rows_padded=self.host.padded_rows,
-                segment_width=self.config.segment_width)
-        if self.aux is not None:
-            ar, ac, av = self.aux
-            acc = acc.at[ar].add(av[:, None] * xp[ac])
-        acc = acc[:m]
+        acc = self._apply(x_mat, backend or self.backend)
         if y is None:
             y = jnp.zeros_like(acc)
         return alpha * acc + beta * jnp.asarray(y, jnp.float32)
 
+    def _shard_acc(self, dev, aux, xl, run):
+        """One shard's accumulate + its aux-spill epilogue against local x."""
+        idx, val, seg_t, seg_c = dev
+        acc = run(idx, val, seg_t, seg_c, xl)
+        if aux is not None:
+            ar, ac, av = aux
+            contrib = av * xl[ac] if xl.ndim == 1 else av[:, None] * xl[ac]
+            acc = acc.at[ar].add(contrib)
+        return acc
+
+    def _apply(self, x, backend):
+        """Raw A @ x over the plan (x: 1-D or (K, N)); returns [:m]."""
+        plan, cfg = self.plan, self.config
+        m, _ = self.shape
+        kp = plan.num_segments_local * cfg.segment_width
+        x = x.astype(jnp.float32)
+        run = functools.partial(
+            ops.run_stream, num_rows_padded=plan.out_rows_padded,
+            segment_width=cfg.segment_width,
+            tiles_per_chunk=cfg.tiles_per_chunk, backend=backend)
+        if self.mesh is not None:
+            return self._apply_sharded(x, run)
+        pad = [(0, 0)] * x.ndim
+        if plan.spec.partition == "col" and plan.num_shards > 1:
+            pad[0] = (0, plan.num_shards * kp - x.shape[0])
+            xp = jnp.pad(x, pad)
+            acc = None
+            for d, (dev, aux) in enumerate(zip(self._shards, self._auxs)):
+                part = self._shard_acc(dev, aux, xp[d * kp:(d + 1) * kp],
+                                       run)
+                acc = part if acc is None else acc + part
+            return acc[:m]
+        pad[0] = (0, kp - x.shape[0])
+        xp = jnp.pad(x, pad)
+        outs = [self._shard_acc(dev, aux, xp, run)
+                for dev, aux in zip(self._shards, self._auxs)]
+        if plan.num_shards == 1:
+            return outs[0][:m]
+        return jnp.concatenate([o[:plan.block_m] for o in outs])[:m]
+
+    def _apply_sharded(self, x, run):
+        """shard_map execution over the mesh axis (row concat / col psum)."""
+        plan, axis = self.plan, self.axis
+        m, _ = self.shape
+        n = plan.num_shards
+        kp = plan.num_segments_local * self.config.segment_width
+        col = plan.spec.partition == "col"
+        pad = [(0, 0)] * x.ndim
+        if col:
+            pad[0] = (0, n * kp - x.shape[0])
+            xp = jnp.pad(x, pad).reshape((n, kp) + x.shape[1:])
+            x_spec = P(axis)
+        else:
+            pad[0] = (0, kp - x.shape[0])
+            xp = jnp.pad(x, pad)
+            x_spec = P()
+
+        def body(idx, val, seg_t, seg_c, ar, ac, av, xv):
+            xl = xv[0] if col else xv
+            acc = self._shard_acc((idx[0], val[0], seg_t[0], seg_c[0]),
+                                  (ar[0], ac[0], av[0]), xl, run)
+            if col:
+                return jax.lax.psum(acc, axis)
+            return acc[None]
+
+        f = compat.shard_map(
+            body, mesh=self.mesh,
+            in_specs=(P(axis),) * 7 + (x_spec,),
+            out_specs=P() if col else P(axis),
+            check_rep=False)  # pallas_call has no replication rule
+        acc = f(self._idx, self._val, self._seg, self._seg_chunk,
+                *self._aux, xp)
+        if col:
+            return acc[:m]
+        acc = acc[:, :plan.block_m]
+        return acc.reshape((-1,) + acc.shape[2:])[:m]
+
     def to_dense(self) -> np.ndarray:
         """Densify (testing only)."""
-        r, c, v = sformat.decode_to_coo(self.host)
+        r, c, v = self.plan.to_coo()
         out = np.zeros(self.shape, np.float32)
         np.add.at(out, (r, c), v)
         return out
+
+
+class SerpensSpMV(SerpensOperator):
+    """The classic single-shard operator: one Serpens stream, one device."""
+
+    def __init__(self, rows, cols, vals, shape,
+                 config: sformat.SerpensConfig = sformat.SerpensConfig(),
+                 backend: str = "auto"):
+        plan = cpart.make_plan(rows, cols, vals, shape, config,
+                               cpart.PlanSpec())
+        super().__init__(plan, backend=backend)
+        self.host = plan.shards[0]
 
 
 def from_dense(a: np.ndarray, config=sformat.SerpensConfig(),

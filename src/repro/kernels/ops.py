@@ -73,22 +73,40 @@ def pad_x(x, num_segments, segment_width):
     return jnp.pad(x.astype(jnp.float32), (0, kp - x.shape[0]))
 
 
-def run_spmv(idx, val, seg_ids_tile, seg_ids_chunk, x, *, num_rows_padded,
-             segment_width, tiles_per_chunk, backend="auto",
-             interpret=None):
-    """Raw A @ x accumulate over the stream. x must be padded to S*W."""
+def run_stream(idx, val, seg_ids_tile, seg_ids_chunk, x, *, num_rows_padded,
+               segment_width, tiles_per_chunk=1, backend="auto",
+               interpret=None):
+    """The one backend-dispatch point for executing a Serpens stream.
+
+    Accepts a 1-D x (matvec) or a 2-D ``(K_padded, N)`` x (matmat) already
+    padded to ``num_segments * segment_width`` rows, and routes to the XLA
+    stream execution or the Pallas kernel.  Every executor — single-device,
+    per-shard loop, or a ``shard_map`` body — funnels through here, so all
+    four (backend x arity) paths share one definition.
+    """
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "xla"
     if backend == "xla":
-        return spmv_stream_xla(idx, val, seg_ids_tile, x,
+        if x.ndim == 1:
+            return spmv_stream_xla(idx, val, seg_ids_tile, x,
+                                   num_rows_padded=num_rows_padded,
+                                   segment_width=segment_width)
+        return spmm_stream_xla(idx, val, seg_ids_tile, x,
                                num_rows_padded=num_rows_padded,
                                segment_width=segment_width)
     if backend == "pallas":
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
-        x2d = x.reshape(-1, segment_width)
-        return serpens_spmv.spmv_pallas(
-            idx, val, seg_ids_chunk, x2d,
+        if x.ndim == 1:
+            return serpens_spmv.spmv_pallas(
+                idx, val, seg_ids_chunk, x.reshape(-1, segment_width),
+                num_rows_padded=num_rows_padded,
+                segment_width=segment_width,
+                tiles_per_chunk=tiles_per_chunk, interpret=interpret)
+        num_segments = x.shape[0] // segment_width
+        return serpens_spmv.spmm_pallas(
+            idx, val, seg_ids_chunk,
+            x.reshape(num_segments, segment_width, -1),
             num_rows_padded=num_rows_padded, segment_width=segment_width,
             tiles_per_chunk=tiles_per_chunk, interpret=interpret)
     raise ValueError(f"unknown backend {backend!r}")

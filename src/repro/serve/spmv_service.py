@@ -40,7 +40,7 @@ def bucket_width(n: int, max_bucket: int) -> int:
 class SpMVRequest:
     ticket: int
     matrix_id: str
-    op: object          # SerpensSpMV captured at submit — a later registry
+    op: object          # SerpensOperator captured at submit — a later registry
                         # eviction cannot strand an already-queued request
     x: np.ndarray
     alpha: float
@@ -90,12 +90,22 @@ class SpMVService:
     """
 
     def __init__(self, registry: MatrixRegistry, max_bucket: int = 16,
-                 backend: str | None = None):
+                 backend: str | None = None, mesh=None,
+                 axis: str | None = None, partition: str | None = None):
         if max_bucket < 1 or max_bucket & (max_bucket - 1):
             raise ValueError("max_bucket must be a power of two >= 1")
+        if mesh is not None and axis is None:
+            raise ValueError("mesh requires axis")
+        if mesh is None and partition is not None:
+            raise ValueError("partition requires mesh")
         self.registry = registry
         self.max_bucket = max_bucket
         self.backend = backend
+        # With a mesh, every dispatched SpMM runs the channel-shard plan
+        # under shard_map over `axis` (registry caches the mesh binding).
+        self.mesh = mesh
+        self.axis = axis
+        self.partition = partition
         self.stats = ServiceStats()
         # submit() is thread-safe; flush() is meant to run on one dispatcher
         # thread (the micro-batcher pattern).
@@ -107,7 +117,9 @@ class SpMVService:
     def submit(self, matrix_id: str, x, alpha: float = 1.0,
                beta: float = 0.0, y=None) -> int:
         """Queue one ``y_out = α·A·x + β·y`` request; returns a ticket."""
-        op = self.registry.get(matrix_id)   # validates id, refreshes LRU
+        op = self.registry.get(             # validates id, refreshes LRU
+            matrix_id, mesh=self.mesh, axis=self.axis,
+            partition=self.partition)
         # Copy on enqueue: the caller may reuse/mutate its buffer before
         # flush (np.asarray would alias an already-float32 input).
         x = np.array(x, np.float32)

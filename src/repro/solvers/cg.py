@@ -23,12 +23,16 @@ class CGResult:
 
 def conjugate_gradient(op, b, x0=None, tol: float = 1e-6,
                        max_iters: int | None = None,
-                       backend: str | None = None) -> CGResult:
+                       backend: str | None = None,
+                       mesh=None, axis: str | None = None) -> CGResult:
     """Solve ``A x = b`` for symmetric positive-definite A.
 
     Stops when ``‖r‖₂ <= tol * ‖b‖₂`` (relative residual) or after
-    ``max_iters`` (default: n, CG's exact-arithmetic bound).
+    ``max_iters`` (default: n, CG's exact-arithmetic bound).  With
+    ``mesh``/``axis`` the whole solve runs over the channel-shard plan.
     """
+    if mesh is not None:
+        op = op.with_mesh(mesh, axis)
     m, k = op.shape
     if m != k:
         raise ValueError(f"CG needs a square (SPD) matrix, got {op.shape}")

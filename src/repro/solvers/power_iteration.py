@@ -29,9 +29,17 @@ def _square(op):
     return m
 
 
+def _bind(op, mesh, axis):
+    """Rebind the operator's channel-shard plan to a mesh axis so every
+    per-iteration SpMV in the while_loop runs sharded."""
+    if mesh is None:
+        return op
+    return op.with_mesh(mesh, axis)
+
+
 def pagerank(op, damping: float = 0.85, tol: float = 1e-9,
-             max_iters: int = 100, r0=None, backend: str | None = None
-             ) -> PowerResult:
+             max_iters: int = 100, r0=None, backend: str | None = None,
+             mesh=None, axis: str | None = None) -> PowerResult:
     """PageRank: r ← d·A·r + (1-d+dangling mass)/n, to an L1 tolerance.
 
     ``op`` is a :class:`~repro.core.spmv.SerpensSpMV` whose columns are
@@ -39,6 +47,7 @@ def pagerank(op, damping: float = 0.85, tol: float = 1e-9,
     all-zero — their mass is redistributed uniformly each step, keeping r a
     probability vector).
     """
+    op = _bind(op, mesh, axis)
     n = _square(op)
     r_init = (jnp.full((n,), 1.0 / n, jnp.float32) if r0 is None
               else jnp.asarray(r0, jnp.float32))
@@ -64,12 +73,14 @@ def pagerank(op, damping: float = 0.85, tol: float = 1e-9,
 
 
 def power_iteration(op, tol: float = 1e-6, max_iters: int = 200,
-                    v0=None, backend: str | None = None) -> PowerResult:
+                    v0=None, backend: str | None = None,
+                    mesh=None, axis: str | None = None) -> PowerResult:
     """Dominant eigenpair of a square A by normalized power iteration.
 
     Converges for matrices with a simple dominant eigenvalue; the residual
     is ``‖A·v − λ·v‖₂`` with v unit-norm.
     """
+    op = _bind(op, mesh, axis)
     n = _square(op)
     if v0 is None:
         v_init = jnp.ones((n,), jnp.float32) / jnp.sqrt(n)

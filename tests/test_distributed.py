@@ -45,6 +45,47 @@ for part in ("row", "col"):
                                rtol=2e-5, atol=2e-5)
     ok.append(f"spmv-{part}")
 
+# --- 1b. sharded path preserves the aux spill stream (OPTIMIZED-style
+# config) and reaches the Pallas kernel + matmat — all through the one
+# channel-shard execution core -------------------------------------------
+cfg_opt = F.SerpensConfig(segment_width=128, lanes=16, sublanes=8,
+                          raw_window=2, spill_hot_rows=True,
+                          lane_balance=1.1)
+rows_h = rows.copy(); rows_h[:len(rows_h) // 3] = 0   # hot row 0 -> spills
+ref_h = spmv_coo_ref(jnp.asarray(rows_h), jnp.asarray(cols),
+                     jnp.asarray(vals), jnp.asarray(x), 600)
+xm = np.random.default_rng(2).normal(size=(800, 4)).astype(np.float32)
+dense_h = np.zeros((600, 800), np.float32)
+np.add.at(dense_h, (rows_h, cols), vals)
+for part in ("row", "col"):
+    d = ShardedSerpensSpMV(rows_h, cols, vals, (600, 800), mesh8, "x",
+                           part, cfg_opt)
+    assert d.plan.n_aux > 0, "spill stream must engage"
+    np.testing.assert_allclose(np.asarray(d.matvec(x)), np.asarray(ref_h),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(d.matmat(xm)), dense_h @ xm,
+                               rtol=2e-4, atol=2e-4)
+    ok.append(f"spmv-{part}-spill")
+d = ShardedSerpensSpMV(rows_h, cols, vals, (600, 800), mesh8, "x",
+                       "row", cfg_opt, backend="pallas")
+np.testing.assert_allclose(np.asarray(d.matvec(x)), np.asarray(ref_h),
+                           rtol=2e-4, atol=2e-4)
+ok.append("spmv-row-pallas")
+
+# --- 1c. registry: single-shard put repartitions once onto the 8-mesh ----
+from repro.core.registry import MatrixRegistry
+reg = MatrixRegistry(config=cfg, backend="xla")
+mid = reg.put(rows, cols, vals, (600, 800))        # single-shard plan
+op8 = reg.get(mid, mesh=mesh8, axis="x")           # row/8: repartition
+assert op8.plan.num_shards == 8 and reg.stats.encodes == 2
+assert reg.get(mid, mesh=mesh8, axis="x") is op8   # cached thereafter
+assert reg.stats.encodes == 2
+ref_p = spmv_coo_ref(jnp.asarray(rows), jnp.asarray(cols),
+                     jnp.asarray(vals), jnp.asarray(x), 600)
+np.testing.assert_allclose(np.asarray(op8.matvec(x)), np.asarray(ref_p),
+                           rtol=2e-4, atol=2e-4)
+ok.append("registry-remesh")
+
 # --- 2. compressed psum ≈ exact psum --------------------------------------
 def body(g):
     return compressed_psum(g, "x")
@@ -183,8 +224,10 @@ def test_distributed_suite():
     assert res.returncode == 0, res.stdout[-3000:] + res.stderr[-3000:]
     assert "PASS:" in res.stdout
     passed = res.stdout.strip().split("PASS:")[-1].split(",")
-    assert set(passed) == {"spmv-row", "spmv-col", "compressed-psum",
-                           "mesh-loss-equiv", "moe-ep-serve",
-                           "seq-sharded-decode", "elastic-remesh",
-                           "spmv-scaling", "b2-decode-dense",
-                           "b2-decode-moe"}
+    assert set(passed) == {"spmv-row", "spmv-col", "spmv-row-spill",
+                           "spmv-col-spill", "spmv-row-pallas",
+                           "registry-remesh",
+                           "compressed-psum", "mesh-loss-equiv",
+                           "moe-ep-serve", "seq-sharded-decode",
+                           "elastic-remesh", "spmv-scaling",
+                           "b2-decode-dense", "b2-decode-moe"}

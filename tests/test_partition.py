@@ -1,0 +1,274 @@
+"""Channel-shard plans: partition parity vs dense, aux-spill preservation,
+pad-stack invariants, registry plan caching, mesh-bound service/solvers.
+
+Mesh cases run in-process on a 1-device mesh (the full 8-device matrix is
+covered by the subprocess suite in ``test_distributed.py``); they still
+exercise the real ``shard_map`` execution path.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import compat
+from repro.core import format as F
+from repro.core import partition as PT
+from repro.core.distributed import ShardedSerpensSpMV
+from repro.core.registry import MatrixRegistry, content_key
+from repro.core.spmv import SerpensOperator, SerpensSpMV
+from repro.serve.spmv_service import SpMVService
+from repro.solvers import conjugate_gradient, pagerank
+
+PAPER_CFG = F.SerpensConfig(segment_width=64, lanes=8, sublanes=4,
+                            raw_window=4)
+# OPTIMIZED_CONFIG's features at test geometry: spill + lane balance on.
+OPT_CFG = F.SerpensConfig(segment_width=64, lanes=8, sublanes=4,
+                          raw_window=2, spill_hot_rows=True,
+                          lane_balance=1.1)
+
+
+def coo(m, k, nnz, seed=0, hot_row=False):
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, m, nnz)
+    if hot_row:                      # power-law-ish: row 0 takes 1/3 of nnz
+        rows[: nnz // 3] = 0
+    cols = rng.integers(0, k, nnz)
+    vals = rng.normal(size=nnz).astype(np.float32)
+    dense = np.zeros((m, k), np.float32)
+    np.add.at(dense, (rows, cols), vals)
+    return rows, cols, vals, dense
+
+
+class TestPlanParity:
+    """Acceptance: single, 2-shard row, 2-shard col × both configs × both
+    backends × matvec and matmat all match the dense reference."""
+
+    @pytest.mark.parametrize("cfg", [PAPER_CFG, OPT_CFG],
+                             ids=["paper", "optimized"])
+    @pytest.mark.parametrize("partition,num_shards",
+                             [("single", 1), ("row", 2), ("col", 2),
+                              ("row", 3), ("col", 3)])
+    @pytest.mark.parametrize("backend", ["xla", "pallas"])
+    def test_matches_dense(self, cfg, partition, num_shards, backend):
+        rows, cols, vals, dense = coo(50, 70, 600, seed=1, hot_row=True)
+        plan = PT.make_plan(rows, cols, vals, (50, 70), cfg,
+                            PT.PlanSpec(partition, num_shards))
+        if cfg.spill_hot_rows:
+            assert plan.n_aux > 0    # the spill stream must actually engage
+        op = SerpensOperator(plan, backend=backend)
+        rng = np.random.default_rng(2)
+        x = rng.normal(size=70).astype(np.float32)
+        xm = rng.normal(size=(70, 3)).astype(np.float32)
+        np.testing.assert_allclose(np.asarray(op.matvec(x)), dense @ x,
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(op.matmat(xm)), dense @ xm,
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_shards_keep_format_invariants(self):
+        rows, cols, vals, _ = coo(60, 90, 800, seed=3, hot_row=True)
+        for partition in ("row", "col"):
+            plan = PT.make_plan(rows, cols, vals, (60, 90), OPT_CFG,
+                                PT.PlanSpec(partition, 3))
+            for sm in plan.shards:
+                F.check_invariants(sm)
+
+    def test_to_coo_roundtrip(self):
+        rows, cols, vals, dense = coo(40, 60, 500, seed=4, hot_row=True)
+        for partition, n in (("single", 1), ("row", 2), ("col", 2)):
+            plan = PT.make_plan(rows, cols, vals, (40, 60), OPT_CFG,
+                                PT.PlanSpec(partition, n))
+            r, c, v = plan.to_coo()
+            got = np.zeros((40, 60), np.float32)
+            np.add.at(got, (r, c), v)
+            np.testing.assert_allclose(got, dense, rtol=1e-6, atol=1e-6)
+
+    def test_spec_validation(self):
+        with pytest.raises(ValueError, match="partition"):
+            PT.PlanSpec("diagonal", 2)
+        with pytest.raises(ValueError, match="num_shards"):
+            PT.PlanSpec("row", 0)
+        with pytest.raises(ValueError, match="single"):
+            PT.PlanSpec("single", 2)
+
+
+class TestPadStack:
+    def test_pads_seg_ids_with_last_segment(self):
+        """Padding seg_ids with 0 would force a spurious re-stage of segment
+        0 on padded tail chunks (and break the ascending-seg invariant)."""
+        cfg = F.SerpensConfig(segment_width=16, lanes=8, sublanes=4)
+        # Shard A: 1 segment.  Shard B: 3 segments (more tiles).
+        a = F.encode(np.arange(8), np.arange(8) % 16,
+                     np.ones(8, np.float32), (8, 16), cfg)
+        b = F.encode(np.arange(24) % 8, np.arange(24) * 2 % 48,
+                     np.ones(24, np.float32), (8, 48), cfg)
+        assert a.num_tiles < b.num_tiles
+        idx, val, seg = PT._pad_stack([a, b])
+        assert seg.shape == (2, b.num_tiles)
+        pad = seg[0, a.num_tiles:]
+        assert pad.size > 0
+        assert (pad == a.seg_ids[-1]).all()          # not zero-filled
+        assert (np.diff(seg[0]) >= 0).all()          # still ascending
+        assert (idx[0, a.num_tiles:] == F.SENTINEL).all()
+        assert (val[0, a.num_tiles:] == 0.0).all()
+
+
+class TestShardedOperator:
+    """shard_map execution on a 1-device mesh — same code path as N devices."""
+
+    @pytest.fixture()
+    def mesh(self):
+        return compat.make_mesh((1,), ("c",))
+
+    def test_sharded_spill_regression(self, mesh):
+        """ShardedSerpensSpMV used to drop aux_rows/aux_cols/aux_vals
+        entirely: any spill-config matrix returned wrong results when
+        sharded.  (Fails on the pre-plan implementation.)"""
+        rows, cols, vals, dense = coo(48, 64, 700, seed=5, hot_row=True)
+        x = np.random.default_rng(6).normal(size=64).astype(np.float32)
+        for partition in ("row", "col"):
+            d = ShardedSerpensSpMV(rows, cols, vals, (48, 64), mesh, "c",
+                                   partition, OPT_CFG)
+            assert d.plan.n_aux > 0  # spill engaged — the bug's trigger
+            np.testing.assert_allclose(np.asarray(d.matvec(x)), dense @ x,
+                                       rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("backend", ["xla", "pallas"])
+    @pytest.mark.parametrize("partition", ["row", "col"])
+    def test_backends_through_sharded_path(self, mesh, backend, partition):
+        """Both backends (Pallas in interpret mode on CPU) reached through
+        shard_map, matvec and matmat, spill preserved."""
+        rows, cols, vals, dense = coo(48, 64, 700, seed=7, hot_row=True)
+        d = ShardedSerpensSpMV(rows, cols, vals, (48, 64), mesh, "c",
+                               partition, OPT_CFG, backend=backend)
+        rng = np.random.default_rng(8)
+        x = rng.normal(size=64).astype(np.float32)
+        xm = rng.normal(size=(64, 4)).astype(np.float32)
+        y = rng.normal(size=48).astype(np.float32)
+        np.testing.assert_allclose(np.asarray(d.matvec(x)), dense @ x,
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(d.matmat(xm)), dense @ xm,
+                                   rtol=2e-4, atol=2e-4)
+        got = d(x, alpha=1.5, beta=0.5, y=y)
+        np.testing.assert_allclose(np.asarray(got),
+                                   1.5 * (dense @ x) + 0.5 * y,
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_shard_count_must_match_axis(self, mesh):
+        rows, cols, vals, _ = coo(32, 32, 200, seed=9)
+        plan = PT.make_plan(rows, cols, vals, (32, 32), PAPER_CFG,
+                            PT.PlanSpec("row", 2))
+        with pytest.raises(ValueError, match="2 shards"):
+            SerpensOperator(plan, mesh=mesh, axis="c")
+
+    def test_with_mesh_reuses_1_shard_plan(self, mesh):
+        rows, cols, vals, dense = coo(32, 48, 300, seed=10)
+        op = SerpensSpMV(rows, cols, vals, (32, 48), PAPER_CFG)
+        x = np.random.default_rng(11).normal(size=48).astype(np.float32)
+        bound = op.with_mesh(mesh, "c")
+        assert bound.mesh is mesh
+        assert bound.plan is op.plan       # 1-shard plan: no re-encode
+        np.testing.assert_allclose(np.asarray(bound.matvec(x)), dense @ x,
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestRegistryPlans:
+    def test_partition_geometry_is_part_of_the_key(self):
+        rows, cols, vals, _ = coo(32, 32, 200, seed=12)
+        k1 = content_key(rows, cols, vals, (32, 32), PAPER_CFG)
+        k2 = content_key(rows, cols, vals, (32, 32), PAPER_CFG,
+                         PT.PlanSpec("row", 2))
+        k3 = content_key(rows, cols, vals, (32, 32), PAPER_CFG,
+                         PT.PlanSpec("row", 4))
+        assert len({k1, k2, k3}) == 3
+        reg = MatrixRegistry(config=PAPER_CFG)
+        m1 = reg.put(rows, cols, vals, (32, 32))
+        m2 = reg.put(rows, cols, vals, (32, 32), partition="row",
+                     num_shards=2)
+        assert m1 != m2 and len(reg) == 2
+        assert reg.get(m2).plan.num_shards == 2
+
+    def test_put_sharded_plan_and_get_with_mesh(self):
+        rows, cols, vals, dense = coo(40, 56, 400, seed=13, hot_row=True)
+        reg = MatrixRegistry(config=OPT_CFG, backend="xla")
+        mid = reg.put(rows, cols, vals, (40, 56), partition="row",
+                      num_shards=1)
+        mesh = compat.make_mesh((1,), ("c",))
+        op = reg.get(mid, mesh=mesh, axis="c")
+        assert op.mesh is mesh
+        assert reg.stats.encodes == 1      # geometry matched: no re-encode
+        assert reg.get(mid, mesh=mesh, axis="c") is op   # binding cached
+        x = np.random.default_rng(14).normal(size=56).astype(np.float32)
+        np.testing.assert_allclose(np.asarray(op.matvec(x)), dense @ x,
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_get_with_1_device_mesh_reuses_single_plan(self):
+        """A 1-shard plan already is the 1-device stream: binding it to a
+        1-device axis must not re-encode or grow the byte footprint.
+        (The true repartition path — single plan → 8-device mesh — runs in
+        the subprocess suite in test_distributed.py.)"""
+        rows, cols, vals, dense = coo(40, 56, 400, seed=15)
+        reg = MatrixRegistry(config=PAPER_CFG, backend="xla")
+        mid = reg.put(rows, cols, vals, (40, 56))      # single-shard plan
+        bytes_before = reg.bytes_in_use
+        mesh = compat.make_mesh((1,), ("c",))
+        op = reg.get(mid, mesh=mesh, axis="c", partition="col")
+        assert op.plan.num_shards == 1
+        assert reg.stats.encodes == 1                  # no repartition
+        assert reg.bytes_in_use == bytes_before        # plan reused
+        assert reg.get(mid, mesh=mesh, axis="c", partition="col") is op
+        x = np.random.default_rng(16).normal(size=56).astype(np.float32)
+        np.testing.assert_allclose(np.asarray(op.matvec(x)), dense @ x,
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_get_partition_without_mesh_rejected(self):
+        rows, cols, vals, _ = coo(16, 16, 50, seed=21)
+        reg = MatrixRegistry(config=PAPER_CFG)
+        mid = reg.put(rows, cols, vals, (16, 16))
+        with pytest.raises(ValueError, match="partition requires"):
+            reg.get(mid, partition="col")
+        with pytest.raises(ValueError, match="partition requires"):
+            SpMVService(reg, partition="col")
+
+
+class TestMeshServiceAndSolvers:
+    def test_service_dispatches_sharded(self):
+        rows, cols, vals, dense = coo(48, 56, 500, seed=17, hot_row=True)
+        reg = MatrixRegistry(config=OPT_CFG, backend="xla")
+        mid = reg.put(rows, cols, vals, (48, 56))
+        mesh = compat.make_mesh((1,), ("c",))
+        svc = SpMVService(reg, max_bucket=8, mesh=mesh, axis="c")
+        rng = np.random.default_rng(18)
+        xs = rng.normal(size=(5, 56)).astype(np.float32)
+        tickets = [svc.submit(mid, x) for x in xs]
+        results = svc.flush()
+        assert svc.stats.batches == 1
+        for t, x in zip(tickets, xs):
+            assert results[t].y.shape == (48,)
+            np.testing.assert_allclose(results[t].y, dense @ x,
+                                       rtol=2e-4, atol=2e-4)
+
+    def test_solvers_accept_mesh(self):
+        n = 48
+        rng = np.random.default_rng(19)
+        a = np.zeros((n, n), np.float32)
+        idx = rng.integers(0, n, (3 * n, 2))
+        a[idx[:, 0], idx[:, 1]] = rng.normal(size=3 * n)
+        a = (a + a.T) / 2
+        a[np.arange(n), np.arange(n)] = np.abs(a).sum(1) + 1.0
+        r, c = np.nonzero(a)
+        op = SerpensSpMV(r, c, a[r, c], (n, n), PAPER_CFG, backend="xla")
+        b = rng.normal(size=n).astype(np.float32)
+        mesh = compat.make_mesh((1,), ("c",))
+        res = conjugate_gradient(op, b, tol=1e-6, mesh=mesh, axis="c")
+        assert res.converged
+        np.testing.assert_allclose(a @ np.asarray(res.x), b,
+                                   rtol=1e-3, atol=1e-3)
+        # pagerank over a sharded column-stochastic graph
+        from repro.data import matrices as M
+        gr, gc, gv = M.power_law_graph(60, 400, seed=20)
+        gv_n = M.column_normalize(gr, gc, gv, 60)
+        gop = SerpensSpMV(gr, gc, gv_n, (60, 60), PAPER_CFG, backend="xla")
+        plain = pagerank(gop, tol=1e-9)
+        sharded = pagerank(gop, tol=1e-9, mesh=mesh, axis="c")
+        np.testing.assert_allclose(np.asarray(sharded.x),
+                                   np.asarray(plain.x), rtol=1e-4,
+                                   atol=1e-6)
