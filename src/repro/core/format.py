@@ -23,6 +23,18 @@ The output is a :class:`SerpensMatrix`: three dense arrays shaped for Pallas
 ``BlockSpec`` streaming — ``idx[T, 8, 128]`` (int32, packed), ``val[T, 8, 128]``
 (fp32) and ``seg_ids[T]`` (int32 scalar-prefetch: which x-segment each tile
 needs).  Tiles are sorted by segment so each x-segment is DMA'd into VMEM once.
+
+Two encoders produce that stream:
+
+* :func:`encode` — the production pipeline.  Fully vectorized: one global
+  counting sort buckets non-zeros by (segment, lane), and the RAW-window
+  reordering uses the *closed form* of the most-frequent-first cooldown
+  schedule (see :func:`_encode_stream`) instead of a per-element Python
+  heap, so a whole matrix encodes in a handful of numpy passes.
+* :func:`encode_reference` — the original per-lane greedy heapq scheduler,
+  kept as the executable specification.  ``encode`` must round-trip to the
+  same COO multiset, satisfy :func:`check_invariants`, and pad no worse;
+  ``tests/test_format_properties.py`` property-tests that equivalence.
 """
 from __future__ import annotations
 
@@ -71,10 +83,16 @@ class SerpensConfig:
     def __post_init__(self):
         if not (0 < self.segment_width <= 1 << 16):
             raise ValueError("segment_width must be in (0, 65536]")
+        if self.lanes < 1:
+            raise ValueError("lanes must be >= 1")
+        if self.sublanes < 1:
+            raise ValueError("sublanes must be >= 1")
         if self.raw_window < 1:
             raise ValueError("raw_window must be >= 1")
         if self.tiles_per_chunk < 1:
             raise ValueError("tiles_per_chunk must be >= 1")
+        if self.lane_balance < 0:
+            raise ValueError("lane_balance must be >= 0")
 
 
 # Paper-faithful geometry (Sec. 3.2-3.4): W=8192, RAW window = one tile.
@@ -83,6 +101,14 @@ PAPER_CONFIG = SerpensConfig()
 # 8-deep hazard), hot-row spill, lane-depth balancing at 1.1× mean.
 OPTIMIZED_CONFIG = SerpensConfig(raw_window=2, spill_hot_rows=True,
                                  lane_balance=1.1)
+
+
+def _empty_i32() -> np.ndarray:
+    return np.zeros((0,), np.int32)
+
+
+def _empty_f32() -> np.ndarray:
+    return np.zeros((0,), np.float32)
 
 
 @dataclasses.dataclass
@@ -98,9 +124,9 @@ class SerpensMatrix:
     seg_ids: np.ndarray  # int32 [num_tiles] — x segment id per tile (ascending)
     num_segments: int
     # Hot-row spill side-stream (empty unless config.spill_hot_rows):
-    aux_rows: np.ndarray = None  # int32 [n_aux]
-    aux_cols: np.ndarray = None  # int32 [n_aux]
-    aux_vals: np.ndarray = None  # float32 [n_aux]
+    aux_rows: np.ndarray = dataclasses.field(default_factory=_empty_i32)
+    aux_cols: np.ndarray = dataclasses.field(default_factory=_empty_i32)
+    aux_vals: np.ndarray = dataclasses.field(default_factory=_empty_f32)
 
     @property
     def num_tiles(self) -> int:
@@ -131,6 +157,451 @@ class SerpensMatrix:
         total = self.idx.size
         kept = self.nnz - self.n_aux
         return float(total - kept) / max(total, 1)
+
+
+def _validate_coo(rows, cols, vals, shape, cfg: SerpensConfig):
+    """Canonicalize + range-check COO triples (shared by both encoders)."""
+    m, k = shape
+    rows = np.asarray(rows, dtype=np.int64)
+    cols = np.asarray(cols, dtype=np.int64)
+    vals = np.asarray(vals, dtype=np.float32)
+    if rows.shape != cols.shape or rows.shape != vals.shape:
+        raise ValueError("rows/cols/vals must have identical shapes")
+    if rows.size and (rows.min() < 0 or rows.max() >= m):
+        raise ValueError("row index out of range")
+    if cols.size and (cols.min() < 0 or cols.max() >= k):
+        raise ValueError("col index out of range")
+    return rows, cols, vals
+
+
+def _check_row_capacity(m: int, cfg: SerpensConfig) -> None:
+    """The lane-local row index of one encoded stream must fit in ROW_BITS
+    bits; 0xFFFF is reserved so a real element can never alias the SENTINEL
+    packed word.  Checked per encoded *shard* shape: a row-partitioned plan
+    of a taller matrix is fine as long as each block fits.
+    """
+    row_cap = (1 << ROW_BITS) - 1
+    if -(-m // cfg.lanes) > row_cap:
+        raise ValueError(
+            f"M={m} exceeds Serpens row capacity {cfg.lanes * row_cap} "
+            f"(lane-local row index must fit in {ROW_BITS} bits; "
+            f"row-partition into smaller blocks to go taller)")
+
+
+@dataclasses.dataclass
+class PreparedCOO:
+    """Validated triples plus the one global bucket sort.
+
+    ``order`` lists entries by (segment, lane, lane-local row) with ties in
+    input order.  The sort is the only super-linear step of the encode
+    pipeline and it is geometry-reusable: ``partition.make_plan`` derives
+    every channel-shard order from it (col/single partitions: as-is; row
+    partition: one stable pass over the shard key — the lane and the
+    *relative* lane-local row order are invariant under lane-aligned row
+    offsets), and ``MatrixRegistry`` keeps it per entry so repartitioning a
+    cached matrix to a new mesh never re-validates or re-sorts from scratch.
+    """
+
+    shape: tuple[int, int]
+    config: SerpensConfig
+    rows: np.ndarray   # int64, validated
+    cols: np.ndarray   # int64, validated
+    vals: np.ndarray   # float32
+    order: np.ndarray  # stable argsort by (segment, lane, lane-local row)
+    # Precomputed per-entry bucket key and packed stream word (int32 when
+    # the geometry fits).  Reused verbatim by single- and col-partition
+    # encodes (lane, lane-local row and segment-local col are invariant
+    # there); row partitions rebuild them shard-locally.
+    bucket_key: np.ndarray | None = None
+    packed: np.ndarray | None = None
+
+    @property
+    def nnz(self) -> int:
+        return int(self.rows.size)
+
+
+def prepare(rows, cols, vals, shape,
+            config: SerpensConfig = SerpensConfig()) -> PreparedCOO:
+    """Validate COO triples and run the global bucket sort once.
+
+    The (segment, lane, lane-local row) key is packed into the narrowest
+    integer numpy's radix sort handles fast — int32 covers every realistic
+    geometry; int64 is the fallback for enormous segment counts.
+    """
+    rows, cols, vals = _validate_coo(rows, cols, vals, shape, config)
+    m, k = int(shape[0]), int(shape[1])
+    w, lanes = config.segment_width, config.lanes
+    seg = cols >> w.bit_length() - 1 if not w & (w - 1) else cols // w
+    row_span = -(-m // lanes)                  # lane-local rows per lane
+    nbk = max(1, -(-k // w)) * lanes           # distinct bucket keys
+    bk = pk = None
+    if nbk * row_span < (1 << 31):
+        r32 = rows.astype(np.int32)
+        if not lanes & (lanes - 1):
+            ln32, rr32 = r32 & (lanes - 1), r32 >> lanes.bit_length() - 1
+        else:
+            ln32, rr32 = r32 % lanes, r32 // lanes
+        bk = seg.astype(np.int32) * np.int32(lanes) + ln32
+        key = bk * np.int32(row_span) + rr32
+        if row_span < (1 << ROW_BITS):
+            # The packed word is only meaningful when a single-shard stream
+            # could hold these rows; taller matrices (row-partition only)
+            # rebuild it shard-locally.
+            cl64 = cols & (w - 1) if not w & (w - 1) else cols % w
+            pk = np.left_shift(rr32, ROW_BITS) | cl64.astype(np.int32)
+    elif nbk * row_span < (1 << 62):
+        key = (seg * lanes + rows % lanes) * row_span + rows // lanes
+    else:                                      # astronomically tall/wide
+        return PreparedCOO(
+            shape=(m, k), config=config, rows=rows, cols=cols, vals=vals,
+            order=np.lexsort((rows // lanes, seg * lanes + rows % lanes)))
+    order = np.argsort(key, kind="stable")
+    return PreparedCOO(shape=(m, k), config=config,
+                       rows=rows, cols=cols, vals=vals, order=order,
+                       bucket_key=bk, packed=pk)
+
+
+def encode(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    vals: np.ndarray,
+    shape: tuple[int, int],
+    config: SerpensConfig = SerpensConfig(),
+) -> SerpensMatrix:
+    """Convert a COO matrix into the Serpens stream format (vectorized).
+
+    Duplicate (row, col) entries are allowed and are summed (standard COO
+    semantics); they stay separate stream elements, kept ``raw_window`` slots
+    apart by the coloring pass.
+
+    Semantics match :func:`encode_reference` (the executable spec): identical
+    recovered COO multiset, identical spill selection, and stream padding no
+    worse — but built in a handful of numpy passes instead of a per-element
+    Python heap loop.
+    """
+    return encode_prepared(prepare(rows, cols, vals, shape, config))
+
+
+def encode_prepared(prep: PreparedCOO) -> SerpensMatrix:
+    """Encode an already-validated/sorted :class:`PreparedCOO`."""
+    shard = np.zeros(prep.nnz, np.int64)
+    return _encode_stream(prep.order, shard, prep.rows, prep.cols, prep.vals,
+                          1, prep.shape, prep.config,
+                          bk_a=prep.bucket_key, pk_a=prep.packed)[0]
+
+
+def _group_starts(key_sorted: np.ndarray):
+    """(starts, sizes) of equal-key runs in a sorted key array (non-empty)."""
+    n = key_sorted.size
+    flag = np.empty(n, np.bool_)
+    flag[0] = True
+    np.not_equal(key_sorted[1:], key_sorted[:-1], out=flag[1:])
+    starts = np.flatnonzero(flag)
+    sizes = np.diff(np.append(starts, n))
+    return starts, sizes
+
+
+def _encode_stream(order, shard, rows_loc, cols_loc, vals, n_shards: int,
+                   shape_local: tuple[int, int], config: SerpensConfig,
+                   bk_a=None, pk_a=None) -> list[SerpensMatrix]:
+    """The vectorized bucket pipeline shared by :func:`encode` and
+    ``partition.make_plan`` — returns one :class:`SerpensMatrix` per shard.
+
+    ``order`` must list entry indices by (shard, segment, lane, lane-local
+    row) with ties in input order (see :func:`prepare`);
+    ``rows_loc``/``cols_loc`` are shard-local coordinates.  Everything
+    downstream of the caller's sort is counting-sort bookkeeping over
+    (segment, lane) buckets, a *group-level* sort (distinct (bucket, row)
+    pairs — far fewer than nnz), closed-form slot assignment, and two
+    scatter writes: O(nnz) numpy passes with no per-element Python.
+
+    The RAW-window reordering uses the closed form of the greedy
+    most-frequent-first cooldown schedule.  Per (segment, lane) bucket with
+    ``n`` kept entries, max destination-row multiplicity ``c``, ``k`` rows at
+    that multiplicity and window ``T``, the optimal schedule length is
+    ``max(n, (c-1)*T + k)`` — the bound the per-element greedy achieves.  It
+    is realized directly: the ``k`` hottest rows sit at offsets ``0..k-1`` of
+    ``c-1`` frames plus a tail (frame ``f`` of width ``k + free_f`` with
+    ``free_f = max(T-k, ⌊R/(c-1)⌋ (+1 for the first R mod (c-1) frames))``
+    for ``R`` remaining entries), and the remaining rows — multiplicity
+    descending — fill the frames' free slots level-major.  Same-row
+    occurrences then always land ≥ T slots apart: consecutive frames at equal
+    offset are ``width ≥ T`` apart, and descending-multiplicity order aligns
+    every row that could wrap past the last frame back to frame 0.
+    """
+    cfg = config
+    m_l, k_l = shape_local
+    _check_row_capacity(m_l, cfg)
+    w, lanes, T = cfg.segment_width, cfg.lanes, cfg.raw_window
+    sub = cfg.sublanes
+    spc = sub * cfg.tiles_per_chunk
+    num_segments = max(1, -(-k_l // w))
+
+    def null_stream():
+        idx = np.full((cfg.tiles_per_chunk, sub, lanes), SENTINEL,
+                      dtype=np.int32)
+        return (idx, np.zeros(idx.shape, np.float32),
+                np.zeros((cfg.tiles_per_chunk,), np.int32))
+
+    shard = np.asarray(shard, np.int64)
+    nnz_shard = np.bincount(shard, minlength=n_shards) if shard.size else \
+        np.zeros(n_shards, np.int64)
+    n_all = int(order.size)
+    if n_all == 0:
+        out = []
+        for _ in range(n_shards):
+            idx, val, seg_ids = null_stream()
+            out.append(SerpensMatrix(
+                shape=shape_local, nnz=0, config=cfg, idx=idx, val=val,
+                seg_ids=seg_ids, num_segments=num_segments))
+        return out
+
+    rows_loc = np.asarray(rows_loc, np.int64)
+    cols_loc = np.asarray(cols_loc, np.int64)
+    vals = np.asarray(vals, np.float32)
+
+    # Bucket/slot arithmetic runs in int32 whenever the bounds allow (the
+    # pipeline is memory-bound; half-width passes are ~2× cheaper) and falls
+    # back to int64 for huge geometries.  The slot bound L ≤ n·(T+1) covers
+    # every intermediate of the closed-form schedule.
+    nboxes = num_segments * lanes * n_shards
+    small = (nboxes < (1 << 31) and m_l < (1 << 31)
+             and (n_all + 1) * (T + 1) < (1 << 31))
+    I = np.int32 if small else np.int64
+
+    # Per-entry geometry in input order (cheap dtype), gathered once.  The
+    # packed stream word is built pre-sort so only three gathers are needed;
+    # the lane-local row is recovered from it by shift (sign extension is
+    # bijective, so equality tests work unmasked).  ``prepare`` hands both
+    # arrays in when its geometry matches (single/col partitions).
+    if pk_a is None:
+        rsrc = rows_loc if I is np.int64 else rows_loc.astype(I)
+        cl_a = (cols_loc & (w - 1) if not w & (w - 1)
+                else cols_loc % w)
+        pk_a = (np.left_shift((rsrc // lanes).astype(np.int32), ROW_BITS)
+                | cl_a.astype(np.int32))
+    if bk_a is None:
+        rsrc = rows_loc if I is np.int64 else rows_loc.astype(I)
+        ln_a = (rsrc & (lanes - 1) if not lanes & (lanes - 1)
+                else rsrc % lanes)
+        sg_a = (cols_loc >> w.bit_length() - 1 if not w & (w - 1)
+                else cols_loc // w).astype(I)
+        if n_shards == 1:
+            bk_a = sg_a * I(lanes) + ln_a.astype(I)
+        else:
+            bk_a = ((shard.astype(I) * I(num_segments) + sg_a) * I(lanes)
+                    + ln_a.astype(I))
+    pk = pk_a[order]             # (rr << 16) | col_local, the stream word
+    vv = vals[order]
+    bk = bk_a[order]
+    rr = pk >> ROW_BITS          # sign-extended lane-local row (bijective)
+
+    # ---- spill passes (selection must match encode_reference) -----------
+    keep = None
+    if cfg.lane_balance:
+        # Cap each lane's depth at lane_balance × the segment's mean lane
+        # depth, keeping the earliest entries in *input* order — which needs
+        # the input-order rank within each bucket, one extra stable pass.
+        sgk = bk // I(lanes)
+        s_starts, s_sizes = _group_starts(sgk)
+        cap = np.ceil(cfg.lane_balance
+                      * np.maximum(1, s_sizes // lanes)).astype(I)
+        oB = np.argsort(bk_a, kind="stable")
+        sB, zB = _group_starts(bk_a[oB])
+        pos_in = np.empty(n_all, I)
+        pos_in[oB] = np.arange(n_all, dtype=I) - np.repeat(
+            sB.astype(I), zB)
+        keep = pos_in[order] < np.repeat(cap, s_sizes)
+    if cfg.spill_hot_rows:
+        # Cap per-row occupancy at ~n_lane/T (earliest occurrences kept) so
+        # the schedule length stays ≈ n_lane; excess goes to the aux COO.
+        # The caller's order makes (bucket, row) runs contiguous with
+        # occurrences in input order.
+        if keep is None:
+            keep = np.ones(n_all, np.bool_)
+        rowflag = np.empty(n_all, np.bool_)
+        rowflag[0] = True
+        np.not_equal(bk[1:], bk[:-1], out=rowflag[1:])
+        rowflag[1:] |= rr[1:] != rr[:-1]
+        b_starts, b_sizes = _group_starts(bk)
+        nkept_b = np.add.reduceat(keep, b_starts)
+        cap2 = np.maximum(1, nkept_b // T)
+        ex_cum = np.cumsum(keep, dtype=I) - keep     # exclusive kept-count
+        rg_starts = np.flatnonzero(rowflag)
+        rg_sizes = np.diff(np.append(rg_starts, n_all))
+        occ_kept = ex_cum - np.repeat(ex_cum[rg_starts], rg_sizes)
+        keep &= occ_kept < np.repeat(cap2.astype(I), b_sizes)
+
+    if keep is not None and not keep.all():
+        spm = ~keep
+        spm_orig = order[spm]                    # original entry indices
+        aux_sh = shard[spm_orig]
+        aux_r_all = rows_loc[spm_orig].astype(np.int32)
+        aux_c_all = cols_loc[spm_orig].astype(np.int32)
+        aux_v_all = vals[spm_orig]
+        kidx = np.flatnonzero(keep)
+        bk, rr, pk, vv = (a[kidx] for a in (bk, rr, pk, vv))
+    else:
+        aux_sh = np.zeros((0,), np.int64)
+        aux_r_all = _empty_i32()
+        aux_c_all = _empty_i32()
+        aux_v_all = _empty_f32()
+    nk = int(bk.size)
+    aux_bounds = np.searchsorted(aux_sh, np.arange(n_shards + 1))
+    if nk == 0:  # every occupied bucket keeps ≥ 1 entry; defensive only
+        out = []
+        for d in range(n_shards):
+            idx, val, seg_ids = null_stream()
+            alo, ahi = aux_bounds[d], aux_bounds[d + 1]
+            out.append(SerpensMatrix(
+                shape=shape_local, nnz=int(nnz_shard[d]), config=cfg,
+                idx=idx, val=val, seg_ids=seg_ids, num_segments=num_segments,
+                aux_rows=aux_r_all[alo:ahi], aux_cols=aux_c_all[alo:ahi],
+                aux_vals=aux_v_all[alo:ahi]))
+        return out
+
+    # ---- closed-form RAW-window schedule over kept entries ---------------
+    # Group level: one element per distinct (bucket, row) pair.
+    rowflag = np.empty(nk, np.bool_)
+    rowflag[0] = True
+    np.not_equal(bk[1:], bk[:-1], out=rowflag[1:])
+    bflag_tail = rowflag[1:].copy()              # bucket-change flags
+    rowflag[1:] |= rr[1:] != rr[:-1]
+    rg_starts = np.flatnonzero(rowflag)          # (G,) group -> entry start
+    G = rg_starts.size
+    g_mult = np.diff(np.append(rg_starts, nk)).astype(I)
+    gb_flag = np.empty(G, np.bool_)              # bucket change, group level
+    gb_flag[0] = True
+    if G > 1:
+        gb_flag[1:] = bflag_tail[rg_starts[1:] - 1]
+    g_bid = np.cumsum(gb_flag) - 1               # dense bucket id per group
+    B_gstarts = np.flatnonzero(gb_flag)          # bucket -> first group
+    # Per-bucket schedule constants (all B-sized, B = #occupied buckets).
+    cmax_b = np.maximum.reduceat(g_mult, B_gstarts)
+    is_hot_g = g_mult == cmax_b[g_bid]
+    kh_b = np.add.reduceat(is_hot_g, B_gstarts).astype(I)
+    nb_b = np.add.reduceat(g_mult, B_gstarts)
+    ent_bstart_b = rg_starts[B_gstarts].astype(I)  # bucket -> entry start
+    Fs_b = np.maximum(cmax_b - 1, 1)
+    rem_b = nb_b - kh_b * cmax_b
+    base_b = rem_b // Fs_b
+    extra_b = rem_b - base_b * Fs_b
+    c0_b = np.maximum(T - kh_b, base_b)          # free slots, narrow frames
+    c1_b = np.maximum(T - kh_b, base_b + 1)      # ... first `extra` frames
+    A_b = kh_b + c0_b                            # frame_start slope
+    D_b = c1_b - c0_b                            # +1 while f < extra
+
+    if int(cmax_b.max()) == 1:
+        # Every destination row distinct in every bucket: the identity
+        # schedule is hazard-free (the reference's fast path, bucket-wide).
+        slot = np.arange(nk, dtype=I) - np.repeat(ent_bstart_b, nb_b)
+    else:
+        # Groups reorder to (bucket, multiplicity desc, row); entries keep
+        # following their group with occurrences in order, so a G-sized sort
+        # replaces any per-entry sort, and slots are computed in the
+        # *current* entry order via each group's final-position constants.
+        g_row = rr[rg_starts] & COL_MASK         # bijective per row: any
+        if G * np.int64(nk + 2) < (np.int64(1) << 46):  # fixed order works
+            gkey = ((g_bid * np.int64(nk + 2) + (nk + 1 - g_mult))
+                    << ROW_BITS) | g_row
+            g_order = np.argsort(gkey)           # keys unique: kind is free
+        else:                                    # giant inputs: 3-key radix
+            g_order = np.lexsort((g_row, -g_mult, g_bid))
+        sz = g_mult[g_order]
+        new_starts = (np.cumsum(sz, dtype=I) - sz)
+        # Final entry-start and bucket-rank of each ORIGINAL group.
+        start_fin_g = np.empty(G, I)
+        start_fin_g[g_order] = new_starts
+        pos_fin_g = np.empty(G, I)
+        pos_fin_g[g_order] = np.arange(G, dtype=I)
+        rank_g = pos_fin_g - B_gstarts.astype(I)[g_bid]
+        hot_g = rank_g < kh_b[g_bid]
+        # Level-major fill index base for non-hot groups (hot groups unused).
+        qg = (start_fin_g - ent_bstart_b[g_bid]
+              - (kh_b * cmax_b)[g_bid])
+        # Expand per-bucket constants to groups once (G-sized gathers), and
+        # merge the additive terms: hot entries add their row rank, the
+        # rest add kh (+ fill level, below).
+        A_g = A_b[g_bid]
+        D_g = D_b[g_bid]
+        extra_g = extra_b[g_bid]
+        Fs_g = Fs_b[g_bid]
+        band0_g = Fs_g * c0_b[g_bid]
+        off_g = np.where(hot_g, rank_g, kh_b[g_bid])
+        # Per-entry expansion: entries follow their group contiguously, so
+        # every "gather by group index" is a plain np.repeat — much cheaper
+        # than indexed loads at this size.
+        j = np.arange(nk, dtype=I) - np.repeat(rg_starts.astype(I), g_mult)
+        hot_e = np.repeat(hot_g, g_mult)
+        extra_e = np.repeat(extra_g, g_mult)
+        q = np.maximum(np.repeat(qg, g_mult) + j, 0)  # hot entries carry
+        Fs_e = np.repeat(Fs_g, g_mult)           # garbage q; masked below
+        d0 = q // Fs_e
+        lvl = d0
+        frm = q - d0 * Fs_e
+        over = np.flatnonzero(q >= np.repeat(band0_g, g_mult))
+        if over.size:                            # ragged top band: rare,
+            geo = np.searchsorted(rg_starts, over, side="right") - 1
+            qx = q[over] - band0_g[geo]          # computed on the subset
+            exo = np.maximum(extra_g[geo], 1)
+            lvl[over] = c0_b[g_bid][geo] + qx // exo
+            frm[over] = qx - (qx // exo) * exo
+        f_or_j = np.where(hot_e, j, frm)
+        slot = (np.repeat(A_g, g_mult) * f_or_j
+                + np.repeat(D_g, g_mult) * np.minimum(f_or_j, extra_e)
+                + np.repeat(off_g, g_mult) + np.where(hot_e, 0, lvl))
+
+    # ---- materialize: per-(shard, segment) depths, two scatter writes ----
+    # Segment grouping derived at bucket level (entry order is unchanged).
+    ubk = bk[ent_bstart_b]                       # bucket keys, B-sized
+    useg = ubk // I(lanes)                       # (shard·S + seg) per bucket
+    sb_flag = np.empty(useg.size, np.bool_)
+    sb_flag[0] = True
+    np.not_equal(useg[1:], useg[:-1], out=sb_flag[1:])
+    S_bfirst = np.flatnonzero(sb_flag)           # segment -> first bucket
+    ent_sstart = ent_bstart_b[S_bfirst]          # segment -> entry start
+    S_sizes = np.diff(np.append(ent_sstart, nk))
+    depth = np.maximum.reduceat(slot, ent_sstart).astype(np.int64) + 1
+    depth = np.maximum(spc, -(-depth // spc) * spc)  # chunk-aligned
+    total = int(depth.sum())
+    I2 = np.int32 if total * lanes < (1 << 31) else np.int64
+    gbase = (np.cumsum(depth) - depth).astype(I2)
+    grow = np.repeat(gbase, S_sizes) + slot.astype(I2)
+    idx_flat = np.full((total * lanes,), SENTINEL, np.int32)
+    val_flat = np.zeros((total * lanes,), np.float32)
+    ln = (bk & (lanes - 1) if not lanes & (lanes - 1)
+          else bk % lanes).astype(I2)
+    flat_pos = grow * I2(lanes) + ln
+    idx_flat[flat_pos] = pk
+    val_flat[flat_pos] = vv
+    idx_flat = idx_flat.reshape(total, lanes)
+    val_flat = val_flat.reshape(total, lanes)
+
+    uniq = useg[S_bfirst].astype(np.int64)
+    g_shard = uniq // num_segments
+    g_seg = (uniq % num_segments).astype(np.int32)
+    shard_rows = np.zeros(n_shards + 1, np.int64)
+    np.add.at(shard_rows, g_shard + 1, depth)
+    row_bounds = np.cumsum(shard_rows)
+    g_bounds = np.searchsorted(g_shard, np.arange(n_shards + 1))
+
+    out = []
+    for d in range(n_shards):
+        lo, hi = row_bounds[d], row_bounds[d + 1]
+        if hi == lo:
+            idx, val, seg_ids = null_stream()
+        else:
+            glo, ghi = g_bounds[d], g_bounds[d + 1]
+            idx = idx_flat[lo:hi].reshape(-1, sub, lanes)
+            val = val_flat[lo:hi].reshape(-1, sub, lanes)
+            seg_ids = np.repeat(g_seg[glo:ghi], depth[glo:ghi] // sub)
+        alo, ahi = aux_bounds[d], aux_bounds[d + 1]
+        out.append(SerpensMatrix(
+            shape=shape_local, nnz=int(nnz_shard[d]), config=cfg,
+            idx=idx, val=val, seg_ids=seg_ids, num_segments=num_segments,
+            aux_rows=aux_r_all[alo:ahi], aux_cols=aux_c_all[alo:ahi],
+            aux_vals=aux_v_all[alo:ahi]))
+    return out
 
 
 def _schedule_lane(rows, cols, vals, window):
@@ -185,37 +656,24 @@ def _schedule_lane(rows, cols, vals, window):
     return out_rows, out_cols, out_vals
 
 
-def encode(
+def encode_reference(
     rows: np.ndarray,
     cols: np.ndarray,
     vals: np.ndarray,
     shape: tuple[int, int],
     config: SerpensConfig = SerpensConfig(),
 ) -> SerpensMatrix:
-    """Convert a COO matrix into the Serpens stream format.
+    """Per-lane greedy heapq encoder — the executable spec for :func:`encode`.
 
-    Duplicate (row, col) entries are allowed and are summed (standard COO
-    semantics); they stay separate stream elements, kept ``raw_window`` slots
-    apart by the coloring pass.
+    O(num_segments × lanes) Python loop around a per-element heap; kept as
+    the equivalence arbiter (round-trip multiset, invariants, padding) for
+    the vectorized pipeline, and as the baseline of
+    ``benchmarks/encode_throughput.py``.
     """
     m, k = shape
-    rows = np.asarray(rows, dtype=np.int64)
-    cols = np.asarray(cols, dtype=np.int64)
-    vals = np.asarray(vals, dtype=np.float32)
-    if rows.shape != cols.shape or rows.shape != vals.shape:
-        raise ValueError("rows/cols/vals must have identical shapes")
-    if rows.size and (rows.min() < 0 or rows.max() >= m):
-        raise ValueError("row index out of range")
-    if cols.size and (cols.min() < 0 or cols.max() >= k):
-        raise ValueError("col index out of range")
+    rows, cols, vals = _validate_coo(rows, cols, vals, shape, config)
+    _check_row_capacity(m, config)
     cfg = config
-    # Lane-local row index must fit in ROW_BITS bits; 0xFFFF is reserved so a
-    # real element can never alias the SENTINEL packed word.
-    row_cap = (1 << ROW_BITS) - 1
-    if -(-m // cfg.lanes) > row_cap:
-        raise ValueError(
-            f"M={m} exceeds Serpens row capacity {cfg.lanes * row_cap} "
-            f"(lane-local row index must fit in {ROW_BITS} bits)")
 
     w = cfg.segment_width
     num_segments = max(1, -(-k // w))
@@ -325,14 +783,13 @@ def encode(
         seg_ids = np.concatenate(
             [seg_ids, np.full((pad,), seg_ids[-1], dtype=np.int32)])
 
-    empty_i = np.zeros((0,), np.int32)
     return SerpensMatrix(
         shape=(m, k), nnz=int(vals.size), config=cfg,
         idx=idx, val=val, seg_ids=seg_ids, num_segments=num_segments,
-        aux_rows=np.concatenate(aux_r) if aux_r else empty_i,
-        aux_cols=np.concatenate(aux_c) if aux_c else empty_i,
+        aux_rows=np.concatenate(aux_r) if aux_r else _empty_i32(),
+        aux_cols=np.concatenate(aux_c) if aux_c else _empty_i32(),
         aux_vals=(np.concatenate(aux_v).astype(np.float32) if aux_v
-                  else np.zeros((0,), np.float32)))
+                  else _empty_f32()))
 
 
 def decode_to_coo(sm: SerpensMatrix):

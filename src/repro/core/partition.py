@@ -167,52 +167,47 @@ def _stack_aux(mats: list[sformat.SerpensMatrix]):
     return rows, cols, vals
 
 
-def make_plan(
-    rows: np.ndarray,
-    cols: np.ndarray,
-    vals: np.ndarray,
-    shape: tuple[int, int],
-    config: sformat.SerpensConfig = sformat.SerpensConfig(),
-    spec: PlanSpec = PlanSpec(),
-) -> ChannelShardPlan:
-    """Split a COO matrix into a channel-shard plan and encode every shard."""
-    m, k = shape
-    rows = np.asarray(rows, np.int64)
-    cols = np.asarray(cols, np.int64)
-    vals = np.asarray(vals, np.float32)
-    if rows.shape != cols.shape or rows.shape != vals.shape:
-        raise ValueError("rows/cols/vals must have identical shapes")
-    if rows.size and (rows.min() < 0 or rows.max() >= m):
-        raise ValueError("row index out of range")
-    if cols.size and (cols.min() < 0 or cols.max() >= k):
-        raise ValueError("col index out of range")
-    cfg = config
+def plan_from_prepared(prep: sformat.PreparedCOO,
+                       spec: PlanSpec = PlanSpec()) -> ChannelShardPlan:
+    """Encode a prepared COO into a channel-shard plan via one shared pass.
+
+    All shards come out of a single bucketed ``format._encode_stream`` call
+    that reuses the prepared (segment, lane) sort: a ``col``/``single`` plan
+    inherits it verbatim (the shard key is a prefix function of the segment
+    key) and a ``row`` plan derives its order with one extra stable pass
+    over the shard key — never N independent ``encode()`` sorts.
+    """
+    cfg = prep.config
+    m, k = prep.shape
     n = spec.num_shards
     w = cfg.segment_width
+    rows, cols, vals = prep.rows, prep.cols, prep.vals
 
-    shards: list[sformat.SerpensMatrix] = []
     block_m, block_k = m, k
-    if spec.partition == "single":
-        shards.append(sformat.encode(rows, cols, vals, shape, cfg))
-    elif spec.partition == "row":
+    if spec.partition == "row":
         # Contiguous row blocks, locally re-indexed; block_m is a lane
-        # multiple so shard accumulators concatenate exactly.
+        # multiple so shard accumulators concatenate exactly (and the lane
+        # of a row is invariant under the shard offset).
         block_m = -(-m // n)
         block_m = -(-block_m // cfg.lanes) * cfg.lanes
-        for d in range(n):
-            lo = d * block_m
-            sel = (rows >= lo) & (rows < lo + block_m)
-            shards.append(sformat.encode(
-                rows[sel] - lo, cols[sel], vals[sel], (block_m, k), cfg))
-    else:  # col
+        shard = rows // block_m
+        order = prep.order[np.argsort(shard[prep.order], kind="stable")]
+        shards = sformat._encode_stream(
+            order, shard, rows - shard * block_m, cols, vals,
+            n, (block_m, k), cfg)
+    elif spec.partition == "col":
         # Contiguous column (segment) blocks; x shards, partial y's sum.
         segs_total = max(1, -(-k // w))
         block_k = -(-segs_total // n) * w
-        for d in range(n):
-            lo = d * block_k
-            sel = (cols >= lo) & (cols < lo + block_k)
-            shards.append(sformat.encode(
-                rows[sel], cols[sel] - lo, vals[sel], (m, block_k), cfg))
+        shard = cols // block_k
+        # block_k is a whole number of segments, so the bucket key and the
+        # packed stream word of the prepared sort apply verbatim.
+        shards = sformat._encode_stream(
+            prep.order, shard, rows, cols - shard * block_k, vals,
+            n, (m, block_k), cfg,
+            bk_a=prep.bucket_key, pk_a=prep.packed)
+    else:  # single
+        shards = [sformat.encode_prepared(prep)]
 
     # All shards must agree on segment count for a uniform x reshape.
     num_segments = max(sm.num_segments for sm in shards)
@@ -225,3 +220,27 @@ def make_plan(
         block_m=block_m, block_k=block_k, num_segments_local=num_segments,
         idx=idx, val=val, seg_ids=seg_ids,
         aux_rows=aux_r, aux_cols=aux_c, aux_vals=aux_v)
+
+
+def make_plan(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    vals: np.ndarray,
+    shape: tuple[int, int],
+    config: sformat.SerpensConfig = sformat.SerpensConfig(),
+    spec: PlanSpec = PlanSpec(),
+    *,
+    prepared: sformat.PreparedCOO | None = None,
+) -> ChannelShardPlan:
+    """Split a COO matrix into a channel-shard plan and encode every shard.
+
+    Pass ``prepared`` (from :func:`repro.core.format.prepare`) to skip
+    validation and reuse its global (segment, lane) sort — how the registry
+    repartitions a cached matrix without re-sorting from scratch.
+    """
+    if prepared is None:
+        prepared = sformat.prepare(rows, cols, vals, shape, config)
+    elif (prepared.shape != (int(shape[0]), int(shape[1]))
+          or prepared.config != config):
+        raise ValueError("prepared COO does not match shape/config")
+    return plan_from_prepared(prepared, spec)

@@ -75,11 +75,18 @@ class RegistryStats:
     encodes: int = 0
     evictions: int = 0
     encode_seconds: float = 0.0
+    encode_slots: int = 0           # stream slots produced by all encodes
 
     @property
     def hit_rate(self) -> float:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
+
+    @property
+    def encode_slots_per_s(self) -> float:
+        """Aggregate encode throughput (stream slots / wall second)."""
+        return (self.encode_slots / self.encode_seconds
+                if self.encode_seconds else 0.0)
 
 
 @dataclasses.dataclass
@@ -89,10 +96,22 @@ class _Entry:
     backend: str                    # backend chosen at put time
     plans: dict                     # PlanSpec -> ChannelShardPlan
     ops: dict                       # (PlanSpec, mesh, axis) -> operator
+    # Prepared COO (validated triples + global (segment, lane) sort) kept so
+    # a repartition to a new geometry reuses the bucketing instead of
+    # decoding the stream and re-sorting from scratch.  None for entries
+    # adopted via put_operator (their input order is unknown).
+    prepared: object = None
+    encode_seconds: float = 0.0     # host wall-time spent encoding this entry
+    encode_slots: int = 0           # stream slots those encodes produced
 
     @property
     def stream_bytes(self) -> int:
         return sum(p.stream_bytes for p in self.plans.values())
+
+    @property
+    def encode_slots_per_s(self) -> float:
+        return (self.encode_slots / self.encode_seconds
+                if self.encode_seconds else 0.0)
 
 
 class MatrixRegistry:
@@ -143,6 +162,26 @@ class MatrixRegistry:
         with self._lock:
             return list(self._entries)
 
+    def stats_snapshot(self) -> RegistryStats:
+        """Consistent copy of the aggregate stats (reads under the lock —
+        the raw ``stats`` object is mutated field-by-field by concurrent
+        puts, so derived ratios read from it can tear)."""
+        with self._lock:
+            return dataclasses.replace(self.stats)
+
+    def encode_stats(self) -> dict[str, dict]:
+        """Per-entry encode economics: wall-time and slot throughput.
+
+        Slots are stream elements (8 B each, padding included) — the unit
+        the paper's bandwidth model streams, so slots/s is directly the
+        host-side preprocessing rate the accelerator must not outrun.
+        """
+        with self._lock:
+            return {key: {"encode_seconds": e.encode_seconds,
+                          "encode_slots": e.encode_slots,
+                          "slots_per_s": e.encode_slots_per_s}
+                    for key, e in self._entries.items()}
+
     # -- core API ---------------------------------------------------------
     def put(self, rows, cols, vals, shape, *, config=None, backend=None,
             matrix_id: str | None = None, partition: str = "single",
@@ -170,12 +209,15 @@ class MatrixRegistry:
         # Encode outside the lock — it is the slow part and pure.
         be = backend or self.default_backend
         t0 = time.perf_counter()
-        plan = cpart.make_plan(rows, cols, vals, shape, cfg, spec)
+        prep = sformat.prepare(rows, cols, vals, shape, cfg)
+        plan = cpart.plan_from_prepared(prep, spec)
         op = SerpensOperator(plan, backend=be)
         dt = time.perf_counter() - t0
+        slots = int(plan.idx.size)
         with self._lock:
             self.stats.encode_seconds += dt
             self.stats.encodes += 1
+            self.stats.encode_slots += slots
             entry = self._entries.get(key)
             if entry is not None and entry.content == ck:
                 self.stats.hits += 1       # raced with another thread
@@ -187,7 +229,9 @@ class MatrixRegistry:
             self.stats.misses += 1
             self._insert(key, _Entry(content=ck, primary=spec, backend=be,
                                      plans={spec: plan},
-                                     ops={(spec, None, None): op}))
+                                     ops={(spec, None, None): op},
+                                     prepared=prep, encode_seconds=dt,
+                                     encode_slots=slots))
         return key
 
     def put_operator(self, op: SerpensOperator,
@@ -254,21 +298,31 @@ class MatrixRegistry:
             if plan is not None:
                 return self._bind(entry, plan, spec, mesh, axis)
             src = entry.plans[entry.primary]
+            prep = entry.prepared
             content = entry.content
         # Repartition outside the lock — the slow host-side encode must not
-        # stall concurrent submit/get/put on the serving tier.
+        # stall concurrent submit/get/put on the serving tier.  Entries put
+        # as triples reuse their prepared bucketing (no decode, no re-sort);
+        # adopted operators fall back to decoding the cached stream.
         t0 = time.perf_counter()
-        r, c, v = src.to_coo()
-        plan = cpart.make_plan(r, c, v, src.shape, src.config, spec)
+        if prep is not None:
+            plan = cpart.plan_from_prepared(prep, spec)
+        else:
+            r, c, v = src.to_coo()
+            plan = cpart.make_plan(r, c, v, src.shape, src.config, spec)
         dt = time.perf_counter() - t0
+        slots = int(plan.idx.size)
         with self._lock:
             self.stats.encode_seconds += dt
             self.stats.encodes += 1
+            self.stats.encode_slots += slots
             entry = self._entries.get(matrix_id)
             if entry is None or entry.content != content:
                 # Entry evicted/replaced mid-encode: serve uncached.
                 return SerpensOperator(plan, mesh=mesh, axis=axis,
                                        backend=self.default_backend)
+            entry.encode_seconds += dt
+            entry.encode_slots += slots
             cached = self._find_plan(entry, spec)
             if cached is not None:
                 plan = cached              # raced with another thread

@@ -13,6 +13,32 @@ import numpy as np
 from repro.core.scheduler import PAPER_TABLE3
 
 
+def coo_from_csr(indptr, indices, data):
+    """CSR → COO triples without materializing a COO copy.
+
+    Only the row ids are expanded (one ``np.repeat`` over the indptr
+    deltas); ``cols``/``vals`` alias the caller's CSR buffers, so feeding
+    ``format.encode`` / ``MatrixRegistry.put`` from CSR costs one extra
+    int64 array rather than three.  Works for any object exposing
+    scipy-style ``(indptr, indices, data)`` — no scipy dependency.
+    """
+    indptr = np.asarray(indptr, dtype=np.int64)
+    if indptr.ndim != 1 or indptr.size < 1:
+        raise ValueError("indptr must be a 1-D array of length nrows+1")
+    counts = np.diff(indptr)
+    if counts.size and counts.min() < 0:
+        raise ValueError("indptr must be non-decreasing")
+    rows = np.repeat(np.arange(indptr.size - 1, dtype=np.int64), counts)
+    return rows, np.asarray(indices), np.asarray(data)
+
+
+def coo_from_csc(indptr, indices, data):
+    """CSC → COO triples; mirror of :func:`coo_from_csr` (cols expanded,
+    ``rows``/``vals`` alias the CSC buffers)."""
+    cols, rows, vals = coo_from_csr(indptr, indices, data)
+    return rows, cols, vals
+
+
 def dedupe(rows, cols, vals, shape):
     """Sum duplicates (COO canonicalization)."""
     m, k = shape

@@ -141,7 +141,9 @@ def spmm_pallas(idx, val, seg_ids, x3d, *, num_rows_padded, segment_width,
     from jax.experimental.pallas import tpu as pltpu
 
     num_tiles, sub, lanes = idx.shape
+    assert num_tiles % tiles_per_chunk == 0
     num_chunks = num_tiles // tiles_per_chunk
+    assert seg_ids.shape == (num_chunks,), (seg_ids.shape, num_chunks)
     r = num_rows_padded // lanes
     w = segment_width
     n = x3d.shape[-1]

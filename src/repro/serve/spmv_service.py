@@ -147,6 +147,28 @@ class SpMVService:
     def pending(self) -> int:
         return len(self._pending)
 
+    def snapshot(self) -> dict:
+        """Serving + preprocessing economics in one dict.
+
+        Combines the micro-batcher's amortization stats with the registry's
+        encode-side numbers (wall-time, slot throughput): the host encode is
+        the cold-start cost of every matrix this service fronts, so a
+        dashboard wants both on the same page.
+        """
+        rs = self.registry.stats_snapshot()   # consistent under the lock
+        return {
+            "batches": self.stats.batches,
+            "vectors": self.stats.vectors,
+            "mean_batch_size": self.stats.mean_batch_size,
+            "amortized_bytes_per_vector":
+                self.stats.amortized_bytes_per_vector,
+            "encodes": rs.encodes,
+            "encode_seconds": rs.encode_seconds,
+            "mean_encode_s": (rs.encode_seconds / rs.encodes
+                              if rs.encodes else 0.0),
+            "encode_slots_per_s": rs.encode_slots_per_s,
+        }
+
     # -- dispatch ---------------------------------------------------------
     def flush(self) -> dict[int, SpMVResult]:
         """Dispatch all pending requests; returns {ticket: result}.

@@ -100,6 +100,178 @@ class TestStats:
         assert sm.idx.size >= sm.nnz
 
 
+class TestConfigValidation:
+    @pytest.mark.parametrize("kw", [dict(lanes=0), dict(lanes=-3),
+                                    dict(sublanes=0), dict(raw_window=0),
+                                    dict(tiles_per_chunk=0),
+                                    dict(lane_balance=-0.5),
+                                    dict(segment_width=0),
+                                    dict(segment_width=1 << 17)])
+    def test_bad_geometry_raises(self, kw):
+        with pytest.raises(ValueError):
+            F.SerpensConfig(**kw)
+
+    def test_aux_fields_default_to_empty_arrays(self):
+        sm = F.SerpensMatrix(
+            shape=(8, 8), nnz=0, config=CFG,
+            idx=np.full((1, 4, 8), F.SENTINEL, np.int32),
+            val=np.zeros((1, 4, 8), np.float32),
+            seg_ids=np.zeros((1,), np.int32), num_segments=1)
+        assert sm.aux_rows is not None and sm.aux_rows.size == 0
+        assert sm.aux_cols.dtype == np.int32
+        assert sm.aux_vals.dtype == np.float32
+        assert sm.n_aux == 0
+
+
+def triples_sorted(r, c, v):
+    order = np.lexsort((v, c, r))
+    return (np.asarray(r)[order], np.asarray(c)[order],
+            np.asarray(v)[order])
+
+
+def assert_encoders_equivalent(rows, cols, vals, shape, cfg):
+    """encode == encode_reference: round-trip multiset, aux selection,
+    invariants, padding.  Shared with the hypothesis property suite."""
+    sv = F.encode(rows, cols, vals, shape, cfg)
+    sr = F.encode_reference(rows, cols, vals, shape, cfg)
+    F.check_invariants(sv)
+    F.check_invariants(sr)
+    for a, b in zip(triples_sorted(*F.decode_to_coo(sv)),
+                    triples_sorted(*F.decode_to_coo(sr))):
+        np.testing.assert_array_equal(a, b)
+    assert sv.n_aux == sr.n_aux
+    for a, b in zip(
+            triples_sorted(sv.aux_rows, sv.aux_cols, sv.aux_vals),
+            triples_sorted(sr.aux_rows, sr.aux_cols, sr.aux_vals)):
+        np.testing.assert_array_equal(a, b)
+    assert sv.padding_ratio <= sr.padding_ratio + 1e-12
+    assert sv.num_segments == sr.num_segments
+    return sv, sr
+
+
+class TestVectorizedVsReference:
+    """Always-on equivalence checks (the hypothesis-driven suite lives in
+    test_format_properties.py); these are the acceptance's explicit cases."""
+
+    @pytest.mark.parametrize("spill", [False, True])
+    def test_matches_reference(self, spill):
+        cfg = F.SerpensConfig(segment_width=64, lanes=8, sublanes=4,
+                              raw_window=3, spill_hot_rows=spill,
+                              lane_balance=1.2 if spill else 0.0)
+        rows, cols, vals = rand_coo(90, 200, 800, seed=9, dupes=True)
+        sv, sr = assert_encoders_equivalent(rows, cols, vals, (90, 200), cfg)
+        assert sv.idx.shape == sr.idx.shape
+
+    @pytest.mark.parametrize("cfg", [F.PAPER_CONFIG, F.OPTIMIZED_CONFIG],
+                             ids=["paper", "optimized"])
+    def test_paper_geometries_random(self, cfg):
+        rows, cols, vals = rand_coo(600, 9000, 4000, seed=21, dupes=True)
+        assert_encoders_equivalent(rows, cols, vals, (600, 9000), cfg)
+
+    @pytest.mark.parametrize("cfg", [F.PAPER_CONFIG, F.OPTIMIZED_CONFIG],
+                             ids=["paper", "optimized"])
+    def test_paper_geometries_power_law(self, cfg):
+        from repro.data import matrices as M
+        rows, cols, vals = M.power_law_graph(1500, 15_000, seed=5)
+        assert_encoders_equivalent(rows, cols, vals, (1500, 1500), cfg)
+
+    def test_empty_lanes(self):
+        """Rows all ≡ 0 (mod lanes): every other lane stays empty."""
+        cfg = F.SerpensConfig(segment_width=32, lanes=8, sublanes=4,
+                              raw_window=4)
+        rows = np.arange(0, 128, 8, dtype=np.int64)
+        cols = np.arange(16, dtype=np.int64)
+        vals = np.linspace(1, 2, 16).astype(np.float32)
+        assert_encoders_equivalent(rows, cols, vals, (128, 64), cfg)
+
+    def test_single_row_hot_matrix(self):
+        """One row owns every non-zero — the worst RAW-window case."""
+        cfg = F.SerpensConfig(segment_width=64, lanes=8, sublanes=4,
+                              raw_window=4)
+        n = 120
+        rows = np.zeros(n, np.int64)
+        cols = np.arange(n, dtype=np.int64) % 64
+        vals = np.arange(n, dtype=np.float32) + 1
+        sv, _ = assert_encoders_equivalent(rows, cols, vals, (8, 64), cfg)
+        # Optimal schedule: (n-1)*T + 1 slots in lane 0, chunk-aligned.
+        assert sv.idx.reshape(-1, cfg.lanes).shape[0] == -(
+            -((n - 1) * 4 + 1) // 16) * 16
+
+    def test_single_hot_row_with_spill(self):
+        cfg = F.SerpensConfig(segment_width=64, lanes=8, sublanes=4,
+                              raw_window=2, spill_hot_rows=True,
+                              lane_balance=1.25)
+        rows = np.concatenate([np.zeros(200, np.int64),
+                               np.arange(100, dtype=np.int64)])
+        cols = np.concatenate([np.arange(200, dtype=np.int64),
+                               np.arange(100, dtype=np.int64)])
+        vals = np.random.default_rng(0).normal(size=300).astype(np.float32)
+        sv, _ = assert_encoders_equivalent(rows, cols, vals, (128, 256), cfg)
+        assert sv.n_aux > 0
+
+    def test_duplicate_row_col_entries(self):
+        cfg = F.SerpensConfig(segment_width=32, lanes=4, sublanes=4,
+                              raw_window=4)
+        rows = np.array([3, 3, 3, 3, 7, 7], np.int64)
+        cols = np.array([5, 5, 5, 5, 1, 1], np.int64)
+        vals = np.array([1., 2., 3., 4., 5., 6.], np.float32)
+        sv, _ = assert_encoders_equivalent(rows, cols, vals, (10, 10), cfg)
+        r2, _, v2 = F.decode_to_coo(sv)
+        assert len(r2) == 6 and v2.sum() == 21.0
+
+    def test_all_empty(self):
+        cfg = F.SerpensConfig(segment_width=32, lanes=4, sublanes=4,
+                              raw_window=4)
+        z = np.zeros(0, np.int64)
+        assert_encoders_equivalent(z, z, np.zeros(0, np.float32),
+                                   (16, 16), cfg)
+
+    def test_prepare_reuse(self):
+        rows, cols, vals = rand_coo(60, 120, 400, seed=11)
+        prep = F.prepare(rows, cols, vals, (60, 120), CFG)
+        sm1 = F.encode_prepared(prep)
+        sm2 = F.encode(rows, cols, vals, (60, 120), CFG)
+        np.testing.assert_array_equal(sm1.idx, sm2.idx)
+        np.testing.assert_array_equal(sm1.val, sm2.val)
+        np.testing.assert_array_equal(sm1.seg_ids, sm2.seg_ids)
+
+
+class TestCSRIngest:
+    def test_csr_views_are_zero_copy_and_encode(self):
+        from repro.data import matrices as M
+        rows, cols, vals = rand_coo(40, 64, 300, seed=6)
+        order = np.lexsort((cols, rows))
+        rows, cols, vals = rows[order], cols[order], vals[order]
+        indptr = np.searchsorted(rows, np.arange(41))
+        indices = cols.copy()
+        data = vals.copy()
+        r2, c2, v2 = M.coo_from_csr(indptr, indices, data)
+        assert np.shares_memory(c2, indices) and np.shares_memory(v2, data)
+        np.testing.assert_array_equal(r2, rows)
+        sm_a = F.encode(r2, c2, v2, (40, 64), CFG)
+        sm_b = F.encode(rows, cols, vals, (40, 64), CFG)
+        np.testing.assert_array_equal(sm_a.idx, sm_b.idx)
+
+    def test_csc_roundtrip(self):
+        from repro.data import matrices as M
+        rows, cols, vals = rand_coo(30, 20, 150, seed=8)
+        order = np.lexsort((rows, cols))
+        rows, cols, vals = rows[order], cols[order], vals[order]
+        indptr = np.searchsorted(cols, np.arange(21))
+        r2, c2, v2 = M.coo_from_csc(indptr, rows.copy(), vals.copy())
+        np.testing.assert_array_equal(c2, cols)
+        np.testing.assert_array_equal(r2, rows)
+        sm = F.encode(r2, c2, v2, (30, 20), CFG)
+        got = dense_of(*F.decode_to_coo(sm), (30, 20))
+        assert got == pytest.approx(dense_of(rows, cols, vals, (30, 20)))
+
+    def test_bad_indptr_raises(self):
+        from repro.data import matrices as M
+        with pytest.raises(ValueError, match="non-decreasing"):
+            M.coo_from_csr(np.array([0, 3, 1]), np.zeros(3, np.int64),
+                           np.zeros(3, np.float32))
+
+
 class TestSpill:
     """Beyond-paper hot-row spill + lane balancing (§Perf C3/C4)."""
 

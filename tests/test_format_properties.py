@@ -1,7 +1,14 @@
 """Hypothesis property tests for the Serpens format (optional dependency).
 
 Skipped wholesale when ``hypothesis`` is not installed; the deterministic
-format tests in ``test_format.py`` always run.
+format tests in ``test_format.py`` — including the explicit
+encode-vs-encode_reference equivalence cases — always run.
+
+The core contract here is encoder equivalence: :func:`repro.core.format.
+encode` (vectorized closed-form scheduler) must match
+:func:`~repro.core.format.encode_reference` (per-lane greedy heapq, the
+executable spec) on every generated matrix — identical recovered COO
+multiset, identical spill selection, invariants hold, padding no worse.
 """
 import numpy as np
 import pytest
@@ -10,7 +17,33 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import format as F  # noqa: E402
-from test_format import rand_coo, dense_of  # noqa: E402
+from test_format import (  # noqa: E402
+    assert_encoders_equivalent, dense_of, rand_coo)
+
+
+CONFIGS = st.sampled_from([
+    F.SerpensConfig(segment_width=32, lanes=4, sublanes=4, raw_window=4),
+    F.SerpensConfig(segment_width=32, lanes=4, sublanes=4, raw_window=1),
+    F.SerpensConfig(segment_width=64, lanes=8, sublanes=2, raw_window=6,
+                    tiles_per_chunk=2),
+    # Spill + lane-balance paths (the OPTIMIZED_CONFIG mechanisms):
+    F.SerpensConfig(segment_width=32, lanes=4, sublanes=4, raw_window=2,
+                    spill_hot_rows=True, lane_balance=1.2),
+    F.SerpensConfig(segment_width=32, lanes=4, sublanes=2, raw_window=3,
+                    spill_hot_rows=True),
+    F.SerpensConfig(segment_width=16, lanes=2, sublanes=2, raw_window=5,
+                    lane_balance=1.05),
+    # Non-power-of-two geometry (exercises the generic div/mod paths):
+    F.SerpensConfig(segment_width=48, lanes=6, sublanes=3, raw_window=4),
+])
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 120), st.integers(1, 150), st.integers(1, 400),
+       st.integers(0, 10_000), CONFIGS)
+def test_property_vectorized_matches_reference(m, k, nnz, seed, cfg):
+    rows, cols, vals = rand_coo(m, k, nnz, seed, dupes=True)
+    assert_encoders_equivalent(rows, cols, vals, (m, k), cfg)
 
 
 @settings(max_examples=30, deadline=None)

@@ -146,6 +146,49 @@ class TestInputValidation:
         assert op.matmat(np.zeros((50, 2), np.float32)).shape == (40, 2)
 
 
+class TestMalformedStreamAsserts:
+    """spmv_pallas and spmm_pallas must reject inconsistent stream metadata
+    loudly (a wrong seg_ids length would silently mis-index x segments)."""
+
+    @pytest.fixture()
+    def stream(self):
+        from repro.kernels import serpens_spmv as K
+        cfg = F.SerpensConfig(segment_width=64, lanes=8, sublanes=4,
+                              raw_window=4, tiles_per_chunk=2)
+        rows, cols, vals, _ = build(40, 120, 300, cfg, seed=15)
+        sm = F.encode(rows, cols, vals, (40, 120), cfg)
+        x2d = np.zeros((sm.num_segments, 64), np.float32)
+        x3d = np.zeros((sm.num_segments, 64, 3), np.float32)
+        return K, cfg, sm, x2d, x3d
+
+    def test_spmv_rejects_bad_seg_ids(self, stream):
+        K, cfg, sm, x2d, _ = stream
+        with pytest.raises(AssertionError):
+            K.spmv_pallas(jnp.asarray(sm.idx), jnp.asarray(sm.val),
+                          jnp.asarray(sm.seg_ids[:-1]), jnp.asarray(x2d),
+                          num_rows_padded=sm.padded_rows,
+                          segment_width=64, tiles_per_chunk=2)
+
+    def test_spmm_rejects_bad_seg_ids(self, stream):
+        K, cfg, sm, _, x3d = stream
+        chunk_seg = sm.seg_ids[::cfg.tiles_per_chunk]
+        with pytest.raises(AssertionError):
+            K.spmm_pallas(jnp.asarray(sm.idx), jnp.asarray(sm.val),
+                          jnp.asarray(np.append(chunk_seg, 0)),
+                          jnp.asarray(x3d),
+                          num_rows_padded=sm.padded_rows,
+                          segment_width=64, tiles_per_chunk=2)
+
+    def test_spmm_rejects_ragged_chunks(self, stream):
+        K, cfg, sm, _, x3d = stream
+        chunk_seg = sm.seg_ids[::cfg.tiles_per_chunk]
+        with pytest.raises(AssertionError):
+            K.spmm_pallas(jnp.asarray(sm.idx[:-1]), jnp.asarray(sm.val[:-1]),
+                          jnp.asarray(chunk_seg), jnp.asarray(x3d),
+                          num_rows_padded=sm.padded_rows,
+                          segment_width=64, tiles_per_chunk=2)
+
+
 class TestFlashAttention:
     """Pallas flash-attention kernel vs pure-jnp oracle (§Perf A6)."""
 

@@ -272,3 +272,87 @@ class TestMeshServiceAndSolvers:
         np.testing.assert_allclose(np.asarray(sharded.x),
                                    np.asarray(plain.x), rtol=1e-4,
                                    atol=1e-6)
+
+
+class TestPreparedReuse:
+    """make_plan must share one global sort across shards (tentpole PR3)."""
+
+    @pytest.mark.parametrize("part,n", [("single", 1), ("row", 3),
+                                        ("col", 2)])
+    @pytest.mark.parametrize("cfg", [PAPER_CFG, OPT_CFG],
+                             ids=["paper", "opt"])
+    def test_prepared_matches_direct(self, part, n, cfg):
+        rows, cols, vals, _ = coo(96, 200, 900, seed=31, hot_row=True)
+        prep = F.prepare(rows, cols, vals, (96, 200), cfg)
+        spec = PT.PlanSpec(part, n)
+        p1 = PT.make_plan(rows, cols, vals, (96, 200), cfg, spec)
+        p2 = PT.make_plan(None, None, None, (96, 200), cfg, spec,
+                          prepared=prep)
+        p3 = PT.plan_from_prepared(prep, spec)
+        for other in (p2, p3):
+            np.testing.assert_array_equal(p1.idx, other.idx)
+            np.testing.assert_array_equal(p1.val, other.val)
+            np.testing.assert_array_equal(p1.seg_ids, other.seg_ids)
+            assert p1.n_aux == other.n_aux
+
+    def test_prepared_mismatch_raises(self):
+        rows, cols, vals, _ = coo(32, 32, 100, seed=32)
+        prep = F.prepare(rows, cols, vals, (32, 32), PAPER_CFG)
+        with pytest.raises(ValueError, match="does not match"):
+            PT.make_plan(None, None, None, (32, 64), PAPER_CFG,
+                         PT.PlanSpec(), prepared=prep)
+        with pytest.raises(ValueError, match="does not match"):
+            PT.make_plan(None, None, None, (32, 32), OPT_CFG,
+                         PT.PlanSpec(), prepared=prep)
+
+    @pytest.mark.parametrize("part,n", [("row", 4), ("col", 3)])
+    def test_sharded_plan_matches_per_block_reference_encode(self, part, n):
+        """Every shard of the shared-pass plan must equal the reference
+        encoder run on that shard's block alone."""
+        rows, cols, vals, _ = coo(80, 260, 700, seed=33)
+        plan = PT.make_plan(rows, cols, vals, (80, 260), PAPER_CFG,
+                            PT.PlanSpec(part, n))
+        for d, sm in enumerate(plan.shards):
+            if part == "row":
+                lo = d * plan.block_m
+                sel = (rows >= lo) & (rows < lo + plan.block_m)
+                ref = F.encode_reference(rows[sel] - lo, cols[sel],
+                                         vals[sel],
+                                         (plan.block_m, 260), PAPER_CFG)
+            else:
+                lo = d * plan.block_k
+                sel = (cols >= lo) & (cols < lo + plan.block_k)
+                ref = F.encode_reference(rows[sel], cols[sel] - lo,
+                                         vals[sel],
+                                         (80, plan.block_k), PAPER_CFG)
+            F.check_invariants(sm)
+            def srt(t):
+                r, c, v = t
+                o = np.lexsort((v, c, r))
+                return r[o], c[o], v[o]
+            for a, b in zip(srt(F.decode_to_coo(sm)),
+                            srt(F.decode_to_coo(ref))):
+                np.testing.assert_array_equal(a, b)
+            assert sm.idx.shape == ref.idx.shape
+
+
+class TestTallMatrixRowPartition:
+    """Row capacity is a per-shard constraint: a matrix taller than one
+    stream's 16-bit lane-local row space must still row-partition."""
+
+    def test_row_partition_beyond_single_stream_capacity(self):
+        cfg = F.SerpensConfig(segment_width=64, lanes=2, sublanes=4)
+        m = 2 * ((1 << 16) - 1) + 4            # one stream cannot hold this
+        rows = np.array([0, 1, m - 2, m - 1], np.int64)
+        cols = np.array([0, 3, 5, 7], np.int64)
+        vals = np.ones(4, np.float32)
+        with pytest.raises(ValueError, match="row capacity"):
+            F.encode(rows, cols, vals, (m, 8), cfg)
+        plan = PT.make_plan(rows, cols, vals, (m, 8), cfg,
+                            PT.PlanSpec("row", 2))
+        r2, c2, v2 = plan.to_coo()
+        o = np.lexsort((c2, r2))
+        np.testing.assert_array_equal(r2[o], rows)
+        np.testing.assert_array_equal(c2[o], cols)
+        for sm in plan.shards:
+            F.check_invariants(sm)

@@ -32,13 +32,13 @@ class TestContentKey:
 class TestCaching:
     def test_repeat_put_is_hit_and_encodes_once(self, monkeypatch):
         calls = {"n": 0}
-        orig = F.encode
+        orig = R.cpart.plan_from_prepared
 
         def counting_encode(*a, **kw):
             calls["n"] += 1
             return orig(*a, **kw)
 
-        monkeypatch.setattr(F, "encode", counting_encode)
+        monkeypatch.setattr(R.cpart, "plan_from_prepared", counting_encode)
         reg = R.MatrixRegistry(config=CFG)
         r, c, v = coo(40, 60, 300, seed=2)
         mid1 = reg.put(r, c, v, (40, 60))
@@ -56,6 +56,45 @@ class TestCaching:
         op = reg.get(mid)
         x = np.random.default_rng(4).normal(size=50).astype(np.float32)
         dense = op.to_dense()
+        np.testing.assert_allclose(np.asarray(op.matvec(x)), dense @ x,
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_encode_stats_per_entry(self):
+        reg = R.MatrixRegistry(config=CFG)
+        r, c, v = coo(40, 60, 300, seed=22)
+        mid = reg.put(r, c, v, (40, 60))
+        prof = reg.encode_stats()
+        assert mid in prof
+        assert prof[mid]["encode_seconds"] > 0.0
+        assert prof[mid]["encode_slots"] > 0
+        assert prof[mid]["slots_per_s"] > 0.0
+        assert reg.stats.encode_slots == prof[mid]["encode_slots"]
+        assert reg.stats.encode_slots_per_s > 0.0
+
+    def test_repartition_reuses_prepared_bucketing(self, monkeypatch):
+        """Repartitioning a put() entry must re-encode from the cached
+        PreparedCOO — never decode the stream back to COO."""
+        import jax
+        from repro.core import partition as cpart
+
+        reg = R.MatrixRegistry(config=CFG)
+        r, c, v = coo(64, 64, 400, seed=23)
+        mid = reg.put(r, c, v, (64, 64))
+        assert reg.stats.encodes == 1
+        dense = reg.get(mid).to_dense()
+
+        def boom(*a, **kw):
+            raise AssertionError("repartition decoded the stream")
+
+        monkeypatch.setattr(cpart.ChannelShardPlan, "to_coo", boom)
+        # Force the repartition branch even on a 1-device mesh (a cached
+        # 1-shard plan would normally satisfy a 1-device axis).
+        monkeypatch.setattr(R.MatrixRegistry, "_find_plan",
+                            staticmethod(lambda entry, spec: None))
+        mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("x",))
+        op = reg.get(mid, mesh=mesh, axis="x", partition="row")
+        assert reg.stats.encodes == 2          # prepared-COO re-encode ran
+        x = np.random.default_rng(0).normal(size=64).astype(np.float32)
         np.testing.assert_allclose(np.asarray(op.matvec(x)), dense @ x,
                                    rtol=1e-4, atol=1e-4)
 

@@ -224,3 +224,20 @@ def test_serve_convenience_preserves_order():
     ys = svc.serve([(mid, x) for x in xs])
     for y, x in zip(ys, xs):
         np.testing.assert_allclose(y, dense @ x, atol=1e-4, rtol=1e-4)
+
+
+def test_snapshot_surfaces_encode_latency():
+    """Service stats must expose the registry's encode-side economics."""
+    reg, mid, dense = make_registry(seed=7)
+    svc = SpMVService(reg, max_bucket=4)
+    xs = np.random.default_rng(3).normal(
+        size=(3, dense.shape[1])).astype(np.float32)
+    svc.serve([(mid, x) for x in xs])
+    snap = svc.snapshot()
+    assert snap["batches"] == 1 and snap["vectors"] == 3
+    assert snap["encodes"] == 1                 # the one put() encode
+    assert snap["encode_seconds"] > 0.0
+    assert snap["mean_encode_s"] == pytest.approx(
+        snap["encode_seconds"] / snap["encodes"])
+    assert snap["encode_slots_per_s"] > 0.0
+    assert snap["amortized_bytes_per_vector"] > 0.0
