@@ -103,6 +103,23 @@ OPTIMIZED_CONFIG = SerpensConfig(raw_window=2, spill_hot_rows=True,
                                  lane_balance=1.1)
 
 
+def _member_of_sorted(sorted_ids: np.ndarray, keys: np.ndarray,
+                      id_space: int) -> np.ndarray:
+    """Per-key membership in a sorted id array.
+
+    One boolean-LUT gather when the id space is small enough to
+    materialize, else a clamped binary search — the shared idiom of the
+    delta-merge paths (`merge_delta`, ``partition.plan_apply_delta``).
+    """
+    if 0 < id_space < 1 << 22:
+        lut = np.zeros(id_space, np.bool_)
+        lut[sorted_ids] = True
+        return lut[keys]
+    ids = sorted_ids.astype(keys.dtype, copy=False)
+    pos = np.minimum(np.searchsorted(ids, keys), ids.size - 1)
+    return ids[pos] == keys
+
+
 def _empty_i32() -> np.ndarray:
     return np.zeros((0,), np.int32)
 
@@ -174,18 +191,38 @@ def _validate_coo(rows, cols, vals, shape, cfg: SerpensConfig):
     return rows, cols, vals
 
 
+def row_capacity(cfg: SerpensConfig) -> int:
+    """Max lane-local rows one encoded stream can address.
+
+    The packed stream word is ``(lane-local row << 16) | segment-local
+    col`` and the int32 padding sentinel is ``-1`` = ``(0xFFFF << 16) |
+    0xFFFF``.  A live element can only alias it when *both* halves
+    saturate, so lane-local row 0xFFFF is legal whenever
+    ``segment_width < 65536`` (the column half then never reaches
+    0xFFFF); only at the full 65536-wide segment must row 0xFFFF be
+    reserved for the sentinel.
+    """
+    if cfg.segment_width < 1 << ROW_BITS:
+        return 1 << ROW_BITS
+    return (1 << ROW_BITS) - 1
+
+
 def _check_row_capacity(m: int, cfg: SerpensConfig) -> None:
     """The lane-local row index of one encoded stream must fit in ROW_BITS
-    bits; 0xFFFF is reserved so a real element can never alias the SENTINEL
-    packed word.  Checked per encoded *shard* shape: a row-partitioned plan
-    of a taller matrix is fine as long as each block fits.
+    bits without a live element aliasing the SENTINEL packed word (see
+    :func:`row_capacity`).  Checked per encoded *shard* shape: a
+    row-partitioned plan of a taller matrix is fine as long as each block
+    fits.
     """
-    row_cap = (1 << ROW_BITS) - 1
+    row_cap = row_capacity(cfg)
     if -(-m // cfg.lanes) > row_cap:
+        reserved = ("; lane-local row 0xFFFF is reserved for the null "
+                    "sentinel at segment_width=65536"
+                    if cfg.segment_width >= 1 << ROW_BITS else "")
         raise ValueError(
             f"M={m} exceeds Serpens row capacity {cfg.lanes * row_cap} "
-            f"(lane-local row index must fit in {ROW_BITS} bits; "
-            f"row-partition into smaller blocks to go taller)")
+            f"(lane-local row index must fit in {ROW_BITS} bits"
+            f"{reserved}; row-partition into smaller blocks to go taller)")
 
 
 @dataclasses.dataclass
@@ -219,6 +256,178 @@ class PreparedCOO:
     def nnz(self) -> int:
         return int(self.rows.size)
 
+    @property
+    def nbytes(self) -> int:
+        """Host bytes held by the resident prepared arrays (triples + sort
+        + cached bucket/packed words) — what the registry's byte budget
+        charges for keeping an entry repartitionable/updatable."""
+        total = (self.rows.nbytes + self.cols.nbytes + self.vals.nbytes
+                 + self.order.nbytes)
+        if self.bucket_key is not None:
+            total += self.bucket_key.nbytes
+        if self.packed is not None:
+            total += self.packed.nbytes
+        return int(total)
+
+    def merge_delta(self, rows, cols, vals=None, *,
+                    mode: str = "add") -> "DeltaMerge":
+        """Merge a (small) COO delta into the cached bucket sort.
+
+        Returns a :class:`DeltaMerge` whose ``prepared`` is bit-identical
+        to ``prepare()`` run cold on the post-delta triples (kept entries
+        in their original input order, then the delta entries), built
+        without re-sorting the untouched entries: the delta is sorted on
+        its own (O(d log d) over d = delta + displaced entries), spliced
+        into the cached order with a linear positional merge, and only the
+        touched (segment, lane) buckets are marked for re-encode.
+
+        Modes:
+          * ``"add"``    — append the delta triples as new COO entries
+            (duplicates sum, standard COO semantics).
+          * ``"set"``    — remove every existing entry at each delta
+            ``(row, col)`` pair, then insert the delta entry (explicit
+            zeros stay; use ``"delete"`` to remove).
+          * ``"delete"`` — remove every existing entry at each delta pair
+            (``vals`` may be omitted; pairs not present are no-ops).
+        """
+        if mode not in ("add", "set", "delete"):
+            raise ValueError(f"mode must be add|set|delete, got {mode!r}")
+        cfg = self.config
+        m, k = self.shape
+        if vals is None:
+            if mode != "delete":
+                raise ValueError("vals is required unless mode='delete'")
+            vals = np.zeros(np.asarray(rows).shape, np.float32)
+        d_rows, d_cols, d_vals = _validate_coo(rows, cols, vals,
+                                               (m, k), cfg)
+        w, lanes = cfg.segment_width, cfg.lanes
+        row_span = -(-m // lanes)
+
+        def bucket_of(r, c):
+            sg = c >> w.bit_length() - 1 if not w & (w - 1) else c // w
+            ln = r & (lanes - 1) if not lanes & (lanes - 1) else r % lanes
+            return sg * np.int64(lanes) + ln
+
+        # Entries displaced by set/delete: every cached entry whose
+        # (row, col) pair appears in the delta.
+        if mode == "add" or d_rows.size == 0 or self.nnz == 0:
+            remove = np.zeros(self.nnz, np.bool_)
+        else:
+            pair_old = self.rows * np.int64(k) + self.cols
+            pair_del = np.unique(d_rows * np.int64(k) + d_cols)
+            remove = _member_of_sorted(pair_del, pair_old, m * k)
+        n_removed = int(np.count_nonzero(remove))
+
+        none = slice(0, 0)
+        add_r = d_rows[none] if mode == "delete" else d_rows
+        add_c = d_cols[none] if mode == "delete" else d_cols
+        add_v = d_vals[none] if mode == "delete" else d_vals
+        n_added = int(add_r.size)
+
+        t_rows = np.concatenate([add_r, self.rows[remove]])
+        t_cols = np.concatenate([add_c, self.cols[remove]])
+        touched_buckets = np.unique(bucket_of(t_rows, t_cols))
+        if touched_buckets.size == 0:          # no-op delta
+            return DeltaMerge(prepared=self, touched_rows=t_rows,
+                              touched_cols=t_cols,
+                              touched_buckets=touched_buckets,
+                              touched_segments=touched_buckets,
+                              n_added=0, n_removed=0)
+
+        keep = None if n_removed == 0 else ~remove
+        n_kept = self.nnz - n_removed
+
+        def gather(a, tail):                 # avoid the O(nnz) boolean
+            return np.concatenate(           # gather when nothing is
+                [a if keep is None else a[keep], tail])  # removed
+
+        new_rows = gather(self.rows, add_r)
+        new_cols = gather(self.cols, add_c)
+        new_vals = gather(self.vals, add_v).astype(np.float32)
+        n_new = n_kept + n_added
+
+        # Bucket of every cached entry in sorted order (the cached int32
+        # key when present — no per-entry div/mod rebuild).
+        bk_all = self.bucket_key
+        if bk_all is None:
+            bk_all = bucket_of(self.rows, self.cols)
+        bk_o = bk_all[self.order]
+        nbk = max(1, -(-k // w)) * lanes
+        in_touched = _member_of_sorted(touched_buckets, bk_o, nbk)
+        # Split the cached order into untouched buckets (reused verbatim
+        # — removals only ever hit touched buckets) and touched buckets
+        # (re-sorted together with the added entries — ties keep cached
+        # entries first, in cached order, exactly like a cold stable sort
+        # over the merged input).
+        u_seq = self.order[~in_touched]
+        bk_u = bk_o[~in_touched]
+        t_old = self.order[in_touched]
+        if keep is not None:
+            t_old = t_old[keep[t_old]]
+            newpos = np.cumsum(keep, dtype=np.int64) - 1
+            u_seq = newpos[u_seq]
+            t_old = newpos[t_old]
+        cand = np.concatenate([t_old, n_kept + np.arange(n_added,
+                                                         dtype=np.int64)])
+        r_cand, c_cand = new_rows[cand], new_cols[cand]
+        bk_cand = bucket_of(r_cand, c_cand)
+        key_cand = bk_cand * np.int64(row_span) + r_cand // lanes
+        perm = np.argsort(key_cand, kind="stable")
+        touched_seq = cand[perm]
+        # Bucket key ranges are disjoint intervals of the sort key and the
+        # two sequences share no bucket, so bucket-level insertion
+        # positions reconstruct the global sort with no O(nnz) re-sort.
+        ins = np.searchsorted(bk_u, bk_cand[perm].astype(bk_u.dtype,
+                                                         copy=False))
+        order = np.empty(n_new, np.int64)
+        t_dst = ins + np.arange(touched_seq.size, dtype=np.int64)
+        u_dst = np.ones(n_new, np.bool_)
+        u_dst[t_dst] = False
+        order[t_dst] = touched_seq
+        order[u_dst] = u_seq
+
+        bk = pk = None
+        if self.bucket_key is not None:
+            bk = gather(self.bucket_key,
+                        bucket_of(add_r, add_c).astype(np.int32))
+        if self.packed is not None:
+            cl = add_c & (w - 1) if not w & (w - 1) else add_c % w
+            add_pk = (np.left_shift((add_r // lanes).astype(np.int32),
+                                    ROW_BITS) | cl.astype(np.int32))
+            pk = gather(self.packed, add_pk)
+        prep = PreparedCOO(shape=self.shape, config=cfg, rows=new_rows,
+                           cols=new_cols, vals=new_vals, order=order,
+                           bucket_key=bk, packed=pk)
+        return DeltaMerge(prepared=prep, touched_rows=t_rows,
+                          touched_cols=t_cols,
+                          touched_buckets=touched_buckets,
+                          touched_segments=np.unique(
+                              touched_buckets // lanes),
+                          n_added=n_added, n_removed=n_removed)
+
+
+@dataclasses.dataclass
+class DeltaMerge:
+    """Result of :meth:`PreparedCOO.merge_delta`.
+
+    ``touched_rows``/``touched_cols`` are the coordinates whose
+    (segment, lane) buckets changed — the union of added and displaced
+    entries — kept so any partition geometry can derive its own touched
+    (shard, segment) set (``partition.plan_apply_delta``).
+    """
+
+    prepared: PreparedCOO
+    touched_rows: np.ndarray      # int64, |added| + |removed|
+    touched_cols: np.ndarray
+    touched_buckets: np.ndarray   # sorted unique seg * lanes + lane
+    touched_segments: np.ndarray  # sorted unique global segment ids
+    n_added: int
+    n_removed: int
+
+    @property
+    def is_noop(self) -> bool:
+        return self.n_added == 0 and self.n_removed == 0
+
 
 def prepare(rows, cols, vals, shape,
             config: SerpensConfig = SerpensConfig()) -> PreparedCOO:
@@ -243,7 +452,7 @@ def prepare(rows, cols, vals, shape,
             ln32, rr32 = r32 % lanes, r32 // lanes
         bk = seg.astype(np.int32) * np.int32(lanes) + ln32
         key = bk * np.int32(row_span) + rr32
-        if row_span < (1 << ROW_BITS):
+        if row_span <= row_capacity(config):
             # The packed word is only meaningful when a single-shard stream
             # could hold these rows; taller matrices (row-partition only)
             # rebuild it shard-locally.
@@ -602,6 +811,76 @@ def _encode_stream(order, shard, rows_loc, cols_loc, vals, n_shards: int,
             aux_rows=aux_r_all[alo:ahi], aux_cols=aux_c_all[alo:ahi],
             aux_vals=aux_v_all[alo:ahi]))
     return out
+
+
+def splice_encoded(old: SerpensMatrix, mini: SerpensMatrix | None,
+                   touched_segments, nnz_new: int) -> SerpensMatrix:
+    """Splice re-encoded segment blocks into an existing stream.
+
+    ``mini`` must encode *exactly* the post-delta entries of
+    ``touched_segments`` (same shape/config — the output of
+    :func:`_encode_stream` over those entries; ``None`` when every touched
+    segment emptied out).  Because the stream is the concatenation of
+    per-segment tile blocks — each self-contained (depth, spill caps and
+    RAW schedule all derive from that segment's entries alone) and
+    chunk-aligned — replacing the touched blocks and keeping the rest
+    byte-for-byte yields the same stream a cold encode of the post-delta
+    matrix would produce.  Cost: O(touched blocks) slicing + one
+    concatenate, never a global re-encode.
+    """
+    cfg = old.config
+    touched = np.unique(np.asarray(touched_segments, np.int64))
+    if touched.size == 0:
+        return old
+    sub, lanes = cfg.sublanes, cfg.lanes
+
+    def blocks(sm):
+        """Tile/aux arrays with the null-chunk placeholder stripped."""
+        if sm is None or sm.nnz - sm.n_aux <= 0:
+            return (np.zeros((0, sub, lanes), np.int32),
+                    np.zeros((0, sub, lanes), np.float32),
+                    np.zeros((0,), np.int32),
+                    _empty_i32(), _empty_i32(), _empty_f32(),
+                    np.zeros((0,), np.int64))
+        aseg = (sm.aux_cols.astype(np.int64) // cfg.segment_width
+                if sm.n_aux else np.zeros((0,), np.int64))
+        return (sm.idx, sm.val, sm.seg_ids,
+                sm.aux_rows, sm.aux_cols, sm.aux_vals, aseg)
+
+    oidx, oval, oseg, oar, oac, oav, oaseg = blocks(old)
+    midx, mval, mseg, mar, mac, mav, maseg = blocks(mini)
+
+    tile_p: list[tuple] = []       # (idx, val, seg_ids) pieces, in order
+    aux_p: list[tuple] = []
+    prev = prev_a = 0
+    for s in touched.tolist():
+        lo, hi = np.searchsorted(oseg, [s, s + 1])
+        mlo, mhi = np.searchsorted(mseg, [s, s + 1])
+        tile_p.append((oidx[prev:lo], oval[prev:lo], oseg[prev:lo]))
+        tile_p.append((midx[mlo:mhi], mval[mlo:mhi], mseg[mlo:mhi]))
+        prev = hi
+        alo, ahi = np.searchsorted(oaseg, [s, s + 1])
+        malo, mahi = np.searchsorted(maseg, [s, s + 1])
+        aux_p.append((oar[prev_a:alo], oac[prev_a:alo], oav[prev_a:alo]))
+        aux_p.append((mar[malo:mahi], mac[malo:mahi], mav[malo:mahi]))
+        prev_a = ahi
+    tile_p.append((oidx[prev:], oval[prev:], oseg[prev:]))
+    aux_p.append((oar[prev_a:], oac[prev_a:], oav[prev_a:]))
+
+    idx = np.concatenate([p[0] for p in tile_p])
+    val = np.concatenate([p[1] for p in tile_p])
+    seg_ids = np.concatenate([p[2] for p in tile_p])
+    if idx.shape[0] == 0:          # stream emptied: keep shapes static
+        idx = np.full((cfg.tiles_per_chunk, sub, lanes), SENTINEL,
+                      np.int32)
+        val = np.zeros(idx.shape, np.float32)
+        seg_ids = np.zeros((cfg.tiles_per_chunk,), np.int32)
+    return SerpensMatrix(
+        shape=old.shape, nnz=int(nnz_new), config=cfg,
+        idx=idx, val=val, seg_ids=seg_ids, num_segments=old.num_segments,
+        aux_rows=np.concatenate([p[0] for p in aux_p]),
+        aux_cols=np.concatenate([p[1] for p in aux_p]),
+        aux_vals=np.concatenate([p[2] for p in aux_p]))
 
 
 def _schedule_lane(rows, cols, vals, window):

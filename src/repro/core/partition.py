@@ -136,6 +136,13 @@ def _pad_stack(mats: list[sformat.SerpensMatrix]):
     cfg = mats[0].config
     tmax = max(m.num_tiles for m in mats)
     tmax = -(-tmax // cfg.tiles_per_chunk) * cfg.tiles_per_chunk
+    if all(m.num_tiles == tmax for m in mats):
+        if len(mats) == 1:             # aligned single shard: pure views
+            m0 = mats[0]
+            return m0.idx[None], m0.val[None], m0.seg_ids[None]
+        return (np.stack([m.idx for m in mats]),
+                np.stack([m.val for m in mats]),
+                np.stack([m.seg_ids for m in mats]))
     idx, val, seg = [], [], []
     for m in mats:
         pad = tmax - m.num_tiles
@@ -156,6 +163,9 @@ def _stack_aux(mats: list[sformat.SerpensMatrix]):
     contributes exactly 0 for them.
     """
     amax = max(m.n_aux for m in mats)
+    if len(mats) == 1:                             # single shard: views
+        m0 = mats[0]
+        return m0.aux_rows[None], m0.aux_cols[None], m0.aux_vals[None]
     rows = np.zeros((len(mats), amax), np.int32)
     cols = np.zeros((len(mats), amax), np.int32)
     vals = np.zeros((len(mats), amax), np.float32)
@@ -220,6 +230,124 @@ def plan_from_prepared(prep: sformat.PreparedCOO,
         block_m=block_m, block_k=block_k, num_segments_local=num_segments,
         idx=idx, val=val, seg_ids=seg_ids,
         aux_rows=aux_r, aux_cols=aux_c, aux_vals=aux_v)
+
+
+def plan_apply_delta(
+    plan: ChannelShardPlan,
+    prep: sformat.PreparedCOO,
+    delta_rows=None,
+    delta_cols=None,
+    delta_vals=None,
+    *,
+    mode: str = "add",
+    merge: sformat.DeltaMerge | None = None,
+) -> tuple[ChannelShardPlan, sformat.DeltaMerge, int]:
+    """Apply a COO delta to every channel shard of ``plan`` in one pass.
+
+    ``prep`` is the :class:`PreparedCOO` the plan was encoded from (the
+    registry keeps it per entry); pass ``merge`` to reuse one
+    :meth:`~repro.core.format.PreparedCOO.merge_delta` across several
+    plans of the same matrix.  Only the touched (shard, segment) tile
+    blocks re-encode — one shared ``_encode_stream`` call over those
+    segments' entries across *all* shards, spliced per shard.  The
+    *encode* cost scales with the delta's segment footprint; what remains
+    O(nnz) is memcpy-level traffic (membership scans, array splices), so
+    small column-local deltas run 5-10x faster than a full re-encode, not
+    arbitrarily faster.  Returns ``(new_plan, merge, respliced_slots)``;
+    the new plan is bit-identical to a cold ``plan_from_prepared`` of the
+    post-delta matrix.
+    """
+    cfg, spec = plan.config, plan.spec
+    m, k = plan.shape
+    if merge is None:
+        if prep is None:
+            raise ValueError("plan_apply_delta needs the plan's PreparedCOO")
+        if prep.shape != (m, k) or prep.config != cfg:
+            raise ValueError("prepared COO does not match the plan")
+        merge = prep.merge_delta(delta_rows, delta_cols, delta_vals,
+                                 mode=mode)
+    if merge.is_noop:
+        return plan, merge, 0
+    new_prep = merge.prepared
+    n = spec.num_shards
+    w, lanes = cfg.segment_width, cfg.lanes
+    nseg_l = plan.num_segments_local
+    rows, cols, vals = new_prep.rows, new_prep.cols, new_prep.vals
+
+    def seg_of(c):
+        return c >> w.bit_length() - 1 if not w & (w - 1) else c // w
+
+    # Shard-local coordinates of the merged triples and of the touched
+    # coordinates (added + displaced entries).
+    if spec.partition == "row":
+        shard_all = rows // plan.block_m
+        rows_loc, cols_loc = rows - shard_all * plan.block_m, cols
+        t_shard = merge.touched_rows // plan.block_m
+        t_lseg = seg_of(merge.touched_cols)
+        pair_all = shard_all * nseg_l + seg_of(cols)
+        shape_local = (plan.block_m, k)
+        bk_a = pk_a = None           # lane-local rows are shard-local
+    elif spec.partition == "col":
+        shard_all = cols // plan.block_k
+        rows_loc, cols_loc = rows, cols - shard_all * plan.block_k
+        t_shard = merge.touched_cols // plan.block_k
+        t_lseg = (merge.touched_cols - t_shard * plan.block_k) // w
+        pair_all = shard_all * nseg_l + seg_of(cols_loc)
+        shape_local = (m, plan.block_k)
+        bk_a, pk_a = new_prep.bucket_key, new_prep.packed
+    else:
+        shard_all = np.zeros(rows.shape, np.int64)
+        rows_loc, cols_loc = rows, cols
+        t_shard = np.zeros(merge.touched_rows.shape, np.int64)
+        t_lseg = seg_of(merge.touched_cols)
+        pair_all = seg_of(cols)
+        shape_local = (m, k)
+        bk_a, pk_a = new_prep.bucket_key, new_prep.packed
+    # The splice unit is the (shard, segment) tile block: a segment's
+    # lanes share one block and one depth, so a delta touching any
+    # (segment, lane) bucket re-encodes that whole segment's entries.
+    touched_pairs = np.unique(t_shard * nseg_l + t_lseg)
+    sel = np.flatnonzero(
+        sformat._member_of_sorted(touched_pairs, pair_all, n * nseg_l))
+    slots = 0
+    if sel.size:
+        s_shard = shard_all[sel]
+        s_rows, s_cols, s_vals = rows_loc[sel], cols_loc[sel], vals[sel]
+        rs = -(-shape_local[0] // lanes)
+        skey = (((s_shard * nseg_l + s_cols // w) * lanes + s_rows % lanes)
+                * np.int64(rs) + s_rows // lanes)
+        minis = sformat._encode_stream(
+            np.argsort(skey, kind="stable"), s_shard, s_rows, s_cols,
+            s_vals, n, shape_local, cfg,
+            bk_a=None if bk_a is None else bk_a[sel],
+            pk_a=None if pk_a is None else pk_a[sel])
+    else:
+        minis = [None] * n
+
+    if n == 1:
+        nnz_shard = np.array([rows.size], np.int64)
+    else:
+        nnz_shard = (np.bincount(shard_all, minlength=n) if rows.size
+                     else np.zeros(n, np.int64))
+    new_shards = []
+    for d in range(n):
+        segs_d = np.unique(t_lseg[t_shard == d])
+        if segs_d.size == 0:
+            new_shards.append(plan.shards[d])   # untouched shard, shared
+            continue
+        mini = minis[d]
+        if mini is not None and mini.nnz - mini.n_aux > 0:
+            slots += int(mini.idx.size)
+        new_shards.append(sformat.splice_encoded(
+            plan.shards[d], mini, segs_d, int(nnz_shard[d])))
+    idx, val, seg_ids = _pad_stack(new_shards)
+    aux_r, aux_c, aux_v = _stack_aux(new_shards)
+    return ChannelShardPlan(
+        shape=(m, k), config=cfg, spec=spec, shards=new_shards,
+        block_m=plan.block_m, block_k=plan.block_k,
+        num_segments_local=nseg_l,
+        idx=idx, val=val, seg_ids=seg_ids,
+        aux_rows=aux_r, aux_cols=aux_c, aux_vals=aux_v), merge, slots
 
 
 def make_plan(

@@ -68,6 +68,19 @@ def stream_key(plan: cpart.ChannelShardPlan) -> str:
     return "s" + h.hexdigest()[:15]
 
 
+def delta_key(parent: str, mode: str, rows, cols, vals) -> str:
+    """Content-chain hash: the post-update version id of an entry derives
+    from its parent content hash plus the delta, so every version in an
+    update lineage is content-addressed (same base + same deltas in the
+    same order ⇒ same id)."""
+    h = hashlib.sha256()
+    h.update(repr((parent, mode)).encode())
+    for arr, dt in ((rows, np.int64), (cols, np.int64), (vals, np.float32)):
+        a = np.asarray([] if arr is None else arr, dtype=dt)
+        h.update(np.ascontiguousarray(a).tobytes())
+    return h.hexdigest()[:16]
+
+
 @dataclasses.dataclass
 class RegistryStats:
     hits: int = 0
@@ -76,6 +89,10 @@ class RegistryStats:
     evictions: int = 0
     encode_seconds: float = 0.0
     encode_slots: int = 0           # stream slots produced by all encodes
+    delta_encodes: int = 0          # incremental update() re-encodes
+    delta_seconds: float = 0.0
+    delta_slots: int = 0            # stream slots respliced by updates
+    prepared_drops: int = 0         # PreparedCOO dropped under byte pressure
 
     @property
     def hit_rate(self) -> float:
@@ -87,6 +104,13 @@ class RegistryStats:
         """Aggregate encode throughput (stream slots / wall second)."""
         return (self.encode_slots / self.encode_seconds
                 if self.encode_seconds else 0.0)
+
+    @property
+    def delta_slots_per_s(self) -> float:
+        """Aggregate incremental re-encode throughput (respliced stream
+        slots / wall second of update() encode time)."""
+        return (self.delta_slots / self.delta_seconds
+                if self.delta_seconds else 0.0)
 
 
 @dataclasses.dataclass
@@ -103,26 +127,50 @@ class _Entry:
     prepared: object = None
     encode_seconds: float = 0.0     # host wall-time spent encoding this entry
     encode_slots: int = 0           # stream slots those encodes produced
+    version: int = 0                # bumped by every update() on this entry
+    delta_encodes: int = 0          # incremental updates applied
+    delta_seconds: float = 0.0      # wall-time of those incremental encodes
+    delta_slots: int = 0            # stream slots respliced by them
 
     @property
     def stream_bytes(self) -> int:
         return sum(p.stream_bytes for p in self.plans.values())
 
     @property
+    def prepared_bytes(self) -> int:
+        """Host bytes of the resident PreparedCOO (0 once dropped)."""
+        return 0 if self.prepared is None else int(self.prepared.nbytes)
+
+    @property
+    def total_bytes(self) -> int:
+        """What the byte budget charges: encoded streams + prepared COO."""
+        return self.stream_bytes + self.prepared_bytes
+
+    @property
     def encode_slots_per_s(self) -> float:
         return (self.encode_slots / self.encode_seconds
                 if self.encode_seconds else 0.0)
+
+    @property
+    def delta_slots_per_s(self) -> float:
+        return (self.delta_slots / self.delta_seconds
+                if self.delta_seconds else 0.0)
 
 
 class MatrixRegistry:
     """LRU cache of ready-to-run channel-shard plans, bounded by stream bytes.
 
-    ``byte_budget`` caps the sum of ``stream_bytes`` over cached plans (the
-    off-chip footprint of the encoded streams, the quantity the paper's
-    bandwidth model is written in).  When an insert pushes the total over
-    budget, least-recently-used entries are evicted — except the entry being
-    inserted, so a single over-budget matrix still serves (with a warning in
-    the stats via ``over_budget``).
+    ``byte_budget`` caps the total host bytes an entry keeps resident: the
+    encoded streams (``stream_bytes`` — the off-chip footprint the paper's
+    bandwidth model is written in) *plus* the entry's ``PreparedCOO``
+    arrays (triples + bucket sort), which for low-padding matrices exceed
+    the stream itself.  When an insert pushes the total over budget,
+    pressure is shed in two stages: first the prepared arrays of
+    least-recently-used entries are dropped (the entry still serves;
+    repartition/update degrade to the decode-and-re-encode path), then
+    whole LRU entries are evicted — except the entry being inserted, so a
+    single over-budget matrix still serves (with a warning in the stats
+    via ``over_budget``).
     """
 
     def __init__(self, byte_budget: int = 1 << 31,
@@ -149,8 +197,19 @@ class MatrixRegistry:
 
     @property
     def bytes_in_use(self) -> int:
+        """Budgeted bytes: encoded streams + resident prepared arrays."""
         with self._lock:
             return self._bytes
+
+    @property
+    def stream_bytes_in_use(self) -> int:
+        with self._lock:
+            return sum(e.stream_bytes for e in self._entries.values())
+
+    @property
+    def prepared_bytes_in_use(self) -> int:
+        with self._lock:
+            return sum(e.prepared_bytes for e in self._entries.values())
 
     @property
     def over_budget(self) -> bool:
@@ -179,8 +238,17 @@ class MatrixRegistry:
         with self._lock:
             return {key: {"encode_seconds": e.encode_seconds,
                           "encode_slots": e.encode_slots,
-                          "slots_per_s": e.encode_slots_per_s}
+                          "slots_per_s": e.encode_slots_per_s,
+                          "version": e.version,
+                          "delta_encodes": e.delta_encodes,
+                          "delta_seconds": e.delta_seconds,
+                          "delta_slots_per_s": e.delta_slots_per_s}
                     for key, e in self._entries.items()}
+
+    def version(self, matrix_id: str) -> int:
+        """How many updates this entry has absorbed (0 = as put)."""
+        with self._lock:
+            return self._entries[matrix_id].version
 
     # -- core API ---------------------------------------------------------
     def put(self, rows, cols, vals, shape, *, config=None, backend=None,
@@ -225,7 +293,7 @@ class MatrixRegistry:
                 return key
             if entry is not None:          # same name, new content: replace
                 del self._entries[key]
-                self._bytes -= entry.stream_bytes
+                self._bytes -= entry.total_bytes
             self.stats.misses += 1
             self._insert(key, _Entry(content=ck, primary=spec, backend=be,
                                      plans={spec: plan},
@@ -253,13 +321,101 @@ class MatrixRegistry:
             else:
                 if entry is not None:
                     del self._entries[key]
-                    self._bytes -= entry.stream_bytes
+                    self._bytes -= entry.total_bytes
                 self.stats.misses += 1
                 self._insert(key, _Entry(
                     content=ck, primary=spec, backend=op.backend,
                     plans={spec: op.plan},
                     ops={(spec, op.mesh, op.axis): op}))
         return key
+
+    def update(self, matrix_id: str, delta_rows, delta_cols,
+               delta_vals=None, *, mode: str = "add") -> str:
+        """Apply a COO delta to a cached matrix without a full re-encode.
+
+        Every cached plan of the entry is updated in one shared pass
+        (:func:`~repro.core.partition.plan_apply_delta`): the delta merges
+        into the entry's resident ``PreparedCOO`` bucket sort and only the
+        touched (shard, segment) tile blocks re-encode, spliced into the
+        existing streams — the encode cost scales with the delta's
+        segment footprint; only memcpy-level O(nnz) passes remain.  Modes
+        ``"add"`` (append entries; duplicates sum), ``"set"`` (replace the
+        entries at each delta (row, col) pair) and ``"delete"`` (remove
+        them; ``delta_vals`` optional).
+
+        The entry is *versioned in place*: its ``matrix_id`` is unchanged
+        but its content hash advances along a chain
+        (``delta_key(parent, delta)``), its ``version`` counter bumps, and
+        all cached mesh bindings are invalidated so the next ``get``
+        serves operators over the new streams.  Operators handed out
+        before the update keep the old (immutable) plan — in-flight work
+        is never retroactively changed.
+
+        Entries whose prepared arrays were dropped under byte pressure
+        (and entries adopted via ``put_operator``) degrade to a
+        decode-and-re-encode of the full matrix — same result, full-encode
+        cost.
+        """
+        d_r = np.asarray(delta_rows)
+        d_c = np.asarray(delta_cols)
+        d_v = delta_vals if delta_vals is None else np.asarray(delta_vals)
+        while True:
+            with self._lock:
+                entry = self._entries.get(matrix_id)
+                if entry is None:
+                    raise KeyError(
+                        f"matrix {matrix_id!r} not in registry "
+                        f"(cached: {len(self._entries)})")
+                content = entry.content
+                prep = entry.prepared
+                plans = dict(entry.plans)
+            new_ck = delta_key(content, mode, d_r, d_c, d_v)
+            # Merge + re-encode outside the lock (the slow, pure part).
+            t0 = time.perf_counter()
+            if prep is not None:
+                merge = prep.merge_delta(d_r, d_c, d_v, mode=mode)
+                if merge.is_noop:      # nothing changed: keep the version
+                    return matrix_id   # and every cached mesh binding
+                new_prep = merge.prepared
+                new_plans, slots = {}, 0
+                for spec, plan in plans.items():
+                    new_plans[spec], merge, s = cpart.plan_apply_delta(
+                        plan, prep, merge=merge)
+                    slots += s
+            else:
+                # Degraded path: prepared dropped (byte pressure) or never
+                # known (adopted operator) — decode and re-encode cold.
+                src = next(iter(plans.values()))
+                r, c, v = src.to_coo()
+                base = sformat.prepare(r, c, v, src.shape, src.config)
+                merge = base.merge_delta(d_r, d_c, d_v, mode=mode)
+                if merge.is_noop:
+                    return matrix_id
+                new_prep = merge.prepared
+                new_plans = {spec: cpart.plan_from_prepared(new_prep, spec)
+                             for spec in plans}
+                slots = sum(int(p.idx.size) for p in new_plans.values())
+            dt = time.perf_counter() - t0
+            with self._lock:
+                entry = self._entries.get(matrix_id)
+                if entry is None or entry.content != content:
+                    continue   # lost a race with put/update: redo on top
+                old_total = entry.total_bytes
+                entry.plans = new_plans
+                entry.prepared = new_prep
+                entry.content = new_ck
+                entry.version += 1
+                entry.ops.clear()          # stale mesh bindings invalidated
+                entry.delta_encodes += 1
+                entry.delta_seconds += dt
+                entry.delta_slots += slots
+                self.stats.delta_encodes += 1
+                self.stats.delta_seconds += dt
+                self.stats.delta_slots += slots
+                self._bytes += entry.total_bytes - old_total
+                self._entries.move_to_end(matrix_id)
+                self._evict_over_budget(keep=matrix_id)
+            return matrix_id
 
     def get(self, matrix_id: str, *, mesh=None, axis: str | None = None,
             partition: str | None = None) -> SerpensOperator:
@@ -336,7 +492,7 @@ class MatrixRegistry:
         with self._lock:
             entry = self._entries.pop(matrix_id, None)
             if entry is not None:
-                self._bytes -= entry.stream_bytes
+                self._bytes -= entry.total_bytes
                 self.stats.evictions += 1
 
     def clear(self) -> None:
@@ -375,15 +531,32 @@ class MatrixRegistry:
     def _insert(self, key: str, entry: _Entry) -> None:
         """Insert + LRU-evict down to budget (caller holds the lock)."""
         self._entries[key] = entry
-        self._bytes += entry.stream_bytes
+        self._bytes += entry.total_bytes
         self._evict_over_budget(keep=key)
 
     def _evict_over_budget(self, keep: str) -> None:
-        """LRU-evict until within budget, never evicting ``keep``."""
+        """Shed bytes until within budget, never evicting ``keep``.
+
+        Two-stage pressure: drop PreparedCOO arrays LRU-first (the entry
+        keeps serving; repartition and update degrade to the decode-path
+        re-encode), only then evict whole entries.  ``keep``'s prepared
+        arrays are the last to go before eviction starts.
+        """
+        if self._bytes > self.byte_budget:
+            victims = [k for k in self._entries if k != keep] + \
+                ([keep] if keep in self._entries else [])
+            for key in victims:
+                if self._bytes <= self.byte_budget:
+                    break
+                e = self._entries[key]
+                if e.prepared is not None:
+                    self._bytes -= e.prepared_bytes
+                    e.prepared = None
+                    self.stats.prepared_drops += 1
         while self._bytes > self.byte_budget and len(self._entries) > 1:
             old_key, old = next(iter(self._entries.items()))
             if old_key == keep:
                 break  # never evict the entry just inserted/extended
             del self._entries[old_key]
-            self._bytes -= old.stream_bytes
+            self._bytes -= old.total_bytes
             self.stats.evictions += 1

@@ -143,30 +143,56 @@ class SpMVService:
                 submit_time=time.perf_counter()))
         return ticket
 
+    def update(self, matrix_id: str, delta_rows, delta_cols,
+               delta_vals=None, *, mode: str = "add") -> str:
+        """Apply a COO delta to a served matrix (incremental re-encode).
+
+        Versioning is snapshot-at-submit: requests already queued (or
+        in-flight in ``flush``) keep the operator they captured when they
+        were submitted and are served against the pre-update matrix;
+        every submit after this call sees the new version.  The two
+        versions never mix inside one batch — batches group on the
+        operator identity, not the id.
+        """
+        return self.registry.update(matrix_id, delta_rows, delta_cols,
+                                    delta_vals, mode=mode)
+
     @property
     def pending(self) -> int:
-        return len(self._pending)
+        with self._lock:            # submit/flush mutate under the lock
+            return len(self._pending)
+
+    def stats_snapshot(self) -> ServiceStats:
+        """Consistent copy of the serving stats (reads under the lock —
+        ``stats`` is mutated field-by-field by concurrent dispatches, so
+        derived ratios read from the raw object can tear)."""
+        with self._lock:
+            return dataclasses.replace(self.stats)
 
     def snapshot(self) -> dict:
         """Serving + preprocessing economics in one dict.
 
         Combines the micro-batcher's amortization stats with the registry's
         encode-side numbers (wall-time, slot throughput): the host encode is
-        the cold-start cost of every matrix this service fronts, so a
-        dashboard wants both on the same page.
+        the cold-start cost of every matrix this service fronts, and the
+        incremental update path is its steady-state cost under a changing
+        matrix, so a dashboard wants all three on the same page.
         """
+        ss = self.stats_snapshot()
         rs = self.registry.stats_snapshot()   # consistent under the lock
         return {
-            "batches": self.stats.batches,
-            "vectors": self.stats.vectors,
-            "mean_batch_size": self.stats.mean_batch_size,
-            "amortized_bytes_per_vector":
-                self.stats.amortized_bytes_per_vector,
+            "batches": ss.batches,
+            "vectors": ss.vectors,
+            "mean_batch_size": ss.mean_batch_size,
+            "amortized_bytes_per_vector": ss.amortized_bytes_per_vector,
             "encodes": rs.encodes,
             "encode_seconds": rs.encode_seconds,
             "mean_encode_s": (rs.encode_seconds / rs.encodes
                               if rs.encodes else 0.0),
             "encode_slots_per_s": rs.encode_slots_per_s,
+            "delta_encodes": rs.delta_encodes,
+            "delta_seconds": rs.delta_seconds,
+            "delta_slots_per_s": rs.delta_slots_per_s,
         }
 
     # -- dispatch ---------------------------------------------------------
@@ -198,12 +224,14 @@ class SpMVService:
                 # The exception discards `results`, so requests from already-
                 # dispatched batches would be stranded too: re-queue every
                 # batch (SpMV is pure — re-dispatch on the next flush is
-                # safe) and roll back the served batches' stats.
-                for done in batches[:bi]:
-                    self.stats.batches -= 1
-                    self.stats.vectors -= len(done)
-                    self.stats.stream_bytes -= done[0].op.stream_bytes
+                # safe) and roll back the served batches' stats, atomically
+                # with the re-queue so a concurrent snapshot never sees the
+                # half-rolled-back state.
                 with self._lock:
+                    for done in batches[:bi]:
+                        self.stats.batches -= 1
+                        self.stats.vectors -= len(done)
+                        self.stats.stream_bytes -= done[0].op.stream_bytes
                     self._pending[:0] = [r for b in batches for r in b]
                 raise
         return results
@@ -244,9 +272,10 @@ class SpMVService:
             ys = np.asarray(out, np.float32)
         done = time.perf_counter()
         bytes_per_vec = op.stream_bytes / n
-        self.stats.batches += 1
-        self.stats.vectors += n
-        self.stats.stream_bytes += op.stream_bytes
+        with self._lock:
+            self.stats.batches += 1
+            self.stats.vectors += n
+            self.stats.stream_bytes += op.stream_bytes
         for j, req in enumerate(batch):
             results[req.ticket] = SpMVResult(
                 ticket=req.ticket, y=ys[:, j],

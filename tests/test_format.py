@@ -56,11 +56,20 @@ class TestRoundtrip:
         F.check_invariants(sm)
 
     def test_row_capacity_guard(self):
+        # Narrow segments leave the column half of the packed word short of
+        # 0xFFFF, so the full 2^16 lane-local rows are usable ...
         cfg = F.SerpensConfig(segment_width=64, lanes=2, sublanes=4)
-        big_m = 2 * ((1 << 16) - 1) + 1
+        big_m = 2 * (1 << 16) + 1
         with pytest.raises(ValueError, match="row capacity"):
             F.encode(np.array([big_m - 1]), np.array([0]),
                      np.array([1.0], np.float32), (big_m, 4), cfg)
+        # ... but at segment_width=65536 row 0xFFFF must stay reserved for
+        # the null sentinel.
+        cfg16 = F.SerpensConfig(segment_width=1 << 16, lanes=2, sublanes=4)
+        big_m = 2 * ((1 << 16) - 1) + 1
+        with pytest.raises(ValueError, match="sentinel"):
+            F.encode(np.array([big_m - 1]), np.array([0]),
+                     np.array([1.0], np.float32), (big_m, 4), cfg16)
 
 
 class TestInvariants:
@@ -270,6 +279,63 @@ class TestCSRIngest:
         with pytest.raises(ValueError, match="non-decreasing"):
             M.coo_from_csr(np.array([0, 3, 1]), np.zeros(3, np.int64),
                            np.zeros(3, np.float32))
+
+
+class TestSentinelBoundary:
+    """The (lane-local row 0xFFFF, col 0xFFFF) packed word equals the int32
+    padding sentinel -1.  A live element must either be representable (it
+    is, whenever segment_width < 65536 — the column half then can't
+    saturate) or rejected at encode time — never silently dropped."""
+
+    CORNER_CFG = F.SerpensConfig(segment_width=64, lanes=1, sublanes=2,
+                                 raw_window=2)
+
+    def corner_matrix(self):
+        """One element at lane-local row 0xFFFF, max segment-local col."""
+        m = 1 << 16
+        return (np.array([m - 1]), np.array([63]),
+                np.array([2.5], np.float32), (m, 64))
+
+    def test_corner_slot_roundtrips(self):
+        rows, cols, vals, shape = self.corner_matrix()
+        for enc in (F.encode, F.encode_reference):
+            sm = enc(rows, cols, vals, shape, self.CORNER_CFG)
+            assert (sm.idx != F.SENTINEL).sum() == 1   # not dropped
+            r2, c2, v2 = F.decode_to_coo(sm)
+            assert list(r2) == [shape[0] - 1] and list(c2) == [63]
+            assert v2[0] == np.float32(2.5)
+            F.check_invariants(sm)
+
+    @pytest.mark.parametrize("backend", ["xla", "pallas"])
+    def test_corner_slot_reaches_kernels(self, backend):
+        from repro.core.spmv import SerpensSpMV
+        rows, cols, vals, shape = self.corner_matrix()
+        op = SerpensSpMV(rows, cols, vals, shape, self.CORNER_CFG)
+        x = np.zeros(shape[1], np.float32)
+        x[63] = 2.0
+        y = np.asarray(op.matvec(x, backend=backend))
+        assert y[shape[0] - 1] == np.float32(5.0)
+        assert np.count_nonzero(y) == 1
+
+    def test_full_width_segment_reserves_row(self):
+        """At segment_width=65536 the corner slot would alias the sentinel:
+        it must be rejected with a clear error, not encoded."""
+        cfg = F.SerpensConfig(segment_width=1 << 16, lanes=1, sublanes=2,
+                              raw_window=2)
+        m = 1 << 16
+        with pytest.raises(ValueError, match="sentinel"):
+            F.encode(np.array([m - 1]), np.array([(1 << 16) - 1]),
+                     np.array([1.0], np.float32), (m, 1 << 16), cfg)
+        # One row less is fine even at full segment width.
+        sm = F.encode(np.array([m - 2]), np.array([(1 << 16) - 1]),
+                      np.array([1.0], np.float32), (m - 1, 1 << 16), cfg)
+        r2, c2, v2 = F.decode_to_coo(sm)
+        assert list(r2) == [m - 2] and list(c2) == [(1 << 16) - 1]
+
+    def test_row_capacity_helper(self):
+        assert F.row_capacity(self.CORNER_CFG) == 1 << 16
+        cfg16 = F.SerpensConfig(segment_width=1 << 16)
+        assert F.row_capacity(cfg16) == (1 << 16) - 1
 
 
 class TestSpill:

@@ -61,6 +61,40 @@ def test_property_roundtrip_and_raw(m, k, nnz, seed):
                                rtol=1e-6, atol=1e-6)
 
 
+@settings(max_examples=40, deadline=None)
+@given(st.integers(4, 100), st.integers(4, 150), st.integers(1, 300),
+       st.integers(1, 60), st.integers(0, 10_000), CONFIGS,
+       st.sampled_from(["add", "set", "delete"]),
+       st.sampled_from([("single", 1), ("row", 2), ("row", 3), ("col", 2)]))
+def test_property_incremental_update_equals_cold_encode(
+        m, k, nnz, nd, seed, cfg, mode, spec_args):
+    """plan_apply_delta must be bit-identical to a cold encode of the
+    post-delta matrix for every mode, geometry and partition."""
+    from repro.core import partition as P
+    from test_update import (assert_plans_identical, make_delta,
+                             post_delta_triples)
+
+    rows, cols, vals = rand_coo(m, k, nnz, seed, dupes=True)
+    rng = np.random.default_rng(seed + 1)
+    spec = P.PlanSpec(*spec_args)
+    prep = F.prepare(rows, cols, vals, (m, k), cfg)
+    plan = P.plan_from_prepared(prep, spec)
+    dr, dc, dv = make_delta(np.asarray(rows, np.int64),
+                            np.asarray(cols, np.int64), m, k, nd,
+                            seed=seed + 2,
+                            overlap=int(rng.integers(0, min(nd, nnz) + 1)))
+    new_plan, merge, _ = P.plan_apply_delta(plan, prep, dr, dc, dv,
+                                            mode=mode)
+    rr, cc, vv = post_delta_triples(np.asarray(rows, np.int64),
+                                    np.asarray(cols, np.int64),
+                                    np.asarray(vals, np.float32),
+                                    dr, dc, dv, k, mode)
+    assert_plans_identical(new_plan, P.make_plan(rr, cc, vv, (m, k), cfg,
+                                                 spec))
+    cold_prep = F.prepare(rr, cc, vv, (m, k), cfg)
+    np.testing.assert_array_equal(merge.prepared.order, cold_prep.order)
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.integers(1, 100), st.integers(1, 120), st.integers(1, 400),
        st.integers(0, 9999))

@@ -183,9 +183,43 @@ class TestLRU:
         reg = R.MatrixRegistry(config=CFG)
         r, c, v = coo(30, 40, 100, seed=14)
         mid = reg.put(r, c, v, (30, 40))
-        assert reg.bytes_in_use == reg.get(mid).stream_bytes
+        # The budget charges encoded streams AND the resident PreparedCOO.
+        assert reg.stream_bytes_in_use == reg.get(mid).stream_bytes
+        assert reg.prepared_bytes_in_use > 0
+        assert reg.bytes_in_use == (reg.stream_bytes_in_use
+                                    + reg.prepared_bytes_in_use)
         reg.evict(mid)
         assert reg.bytes_in_use == 0 and len(reg) == 0
         mid = reg.put(r, c, v, (30, 40))
         reg.clear()
         assert reg.bytes_in_use == 0 and len(reg) == 0
+
+    def test_pressure_drops_prepared_before_evicting(self):
+        """Over budget, PreparedCOO arrays go first; entries only after."""
+        probe = R.MatrixRegistry(config=CFG)
+        r, c, v = coo(40, 60, 300, seed=18)
+        pid = probe.put(r, c, v, (40, 60))
+        stream = probe.get(pid).stream_bytes
+        assert probe.prepared_bytes_in_use > 0
+        # Room for both entries' streams but not for any prepared arrays.
+        reg = R.MatrixRegistry(byte_budget=2 * stream + stream // 2,
+                               config=CFG)
+        a = reg.put(r, c, v, (40, 60))
+        r2, c2, v2 = coo(40, 60, 300, seed=19)
+        b = reg.put(r2, c2, v2, (40, 60))
+        assert a in reg and b in reg              # nothing evicted ...
+        assert reg.stats_snapshot().prepared_drops == 2
+        assert reg.prepared_bytes_in_use == 0     # ... prepared shed instead
+        assert reg.stats_snapshot().evictions == 0
+        assert reg.bytes_in_use <= reg.byte_budget
+        # The degraded entry still serves and still repartitions (via the
+        # decode path) and still updates (via the full re-encode path).
+        x = np.random.default_rng(0).normal(size=60).astype(np.float32)
+        dense = reg.get(a).to_dense()
+        np.testing.assert_allclose(np.asarray(reg.get(a).matvec(x)),
+                                   dense @ x, rtol=1e-4, atol=1e-4)
+        reg.update(a, [1], [2], [3.0])
+        assert reg.version(a) == 1
+        dense[1, 2] += 3.0
+        np.testing.assert_allclose(reg.get(a).to_dense(), dense,
+                                   rtol=1e-6, atol=1e-6)

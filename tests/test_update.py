@@ -1,0 +1,491 @@
+"""Incremental delta-stream re-encode: merge_delta / splice_encoded /
+plan_apply_delta / MatrixRegistry.update / SpMVService.update.
+
+The contract under test is *identity*: an incremental update must produce
+the same plan — bit-for-bit, not just numerically — as a cold encode of
+the post-delta matrix (kept entries in their original input order, then
+the delta entries).  Hypothesis-driven variants live in
+``test_format_properties.py``.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import format as F
+from repro.core import partition as P
+from repro.core.registry import MatrixRegistry
+from repro.serve.spmv_service import SpMVService
+
+CFG = F.SerpensConfig(segment_width=64, lanes=8, sublanes=4, raw_window=4)
+SPILL_CFG = F.SerpensConfig(segment_width=64, lanes=8, sublanes=4,
+                            raw_window=2, spill_hot_rows=True,
+                            lane_balance=1.1)
+
+
+def coo(m, k, nnz, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, m, nnz).astype(np.int64),
+            rng.integers(0, k, nnz).astype(np.int64),
+            rng.normal(size=nnz).astype(np.float32))
+
+
+def make_delta(rows, cols, m, k, nd, seed, overlap):
+    """A delta of ``nd`` entries, ``overlap`` of which hit existing pairs."""
+    rng = np.random.default_rng(seed)
+    dr = rng.integers(0, m, nd).astype(np.int64)
+    dc = rng.integers(0, k, nd).astype(np.int64)
+    dv = rng.normal(size=nd).astype(np.float32)
+    hit = rng.integers(0, rows.size, overlap)
+    dr[:overlap], dc[:overlap] = rows[hit], cols[hit]
+    return dr, dc, dv
+
+
+def post_delta_triples(rows, cols, vals, dr, dc, dv, k, mode):
+    """Reference semantics: the post-delta triples a cold put would see."""
+    if mode == "add":
+        keep = np.ones(rows.size, bool)
+    else:
+        pd = np.unique(dr * np.int64(k) + dc)
+        po = rows * np.int64(k) + cols
+        pos = np.minimum(np.searchsorted(pd, po), pd.size - 1)
+        keep = pd[pos] != po
+    if mode == "delete":
+        return rows[keep], cols[keep], vals[keep]
+    return (np.concatenate([rows[keep], dr]),
+            np.concatenate([cols[keep], dc]),
+            np.concatenate([vals[keep], dv]).astype(np.float32))
+
+
+def assert_plans_identical(a: P.ChannelShardPlan, b: P.ChannelShardPlan):
+    for name in ("idx", "val", "seg_ids", "aux_rows", "aux_cols",
+                 "aux_vals"):
+        np.testing.assert_array_equal(getattr(a, name), getattr(b, name),
+                                      err_msg=name)
+    assert a.nnz == b.nnz and a.n_aux == b.n_aux
+    for sa, sb in zip(a.shards, b.shards):
+        assert sa.nnz == sb.nnz and sa.num_segments == sb.num_segments
+
+
+class TestMergeDelta:
+    @pytest.mark.parametrize("mode", ["add", "set", "delete"])
+    def test_merged_prepare_is_bit_identical_to_cold(self, mode):
+        rows, cols, vals = coo(96, 300, 800, seed=1)
+        prep = F.prepare(rows, cols, vals, (96, 300), CFG)
+        dr, dc, dv = make_delta(rows, cols, 96, 300, 40, seed=2, overlap=15)
+        merge = prep.merge_delta(dr, dc, dv, mode=mode)
+        rr, cc, vv = post_delta_triples(rows, cols, vals, dr, dc, dv,
+                                        300, mode)
+        cold = F.prepare(rr, cc, vv, (96, 300), CFG)
+        for name in ("rows", "cols", "vals", "order", "bucket_key",
+                     "packed"):
+            np.testing.assert_array_equal(getattr(merge.prepared, name),
+                                          getattr(cold, name), err_msg=name)
+
+    def test_noop_delta_returns_same_prepared(self):
+        rows, cols, vals = coo(32, 64, 100, seed=3)
+        prep = F.prepare(rows, cols, vals, (32, 64), CFG)
+        # Deleting absent pairs touches nothing.
+        absent = np.setdiff1d(np.arange(32 * 64),
+                              rows * 64 + cols)[:5]
+        merge = prep.merge_delta(absent // 64, absent % 64, mode="delete")
+        assert merge.is_noop and merge.prepared is prep
+        # Empty delta in any mode is a no-op too.
+        z = np.zeros(0, np.int64)
+        assert prep.merge_delta(z, z, np.zeros(0, np.float32)).is_noop
+
+    def test_delete_without_vals_and_validation(self):
+        rows, cols, vals = coo(32, 64, 100, seed=4)
+        prep = F.prepare(rows, cols, vals, (32, 64), CFG)
+        merge = prep.merge_delta(rows[:3], cols[:3], mode="delete")
+        assert merge.n_removed >= 3        # dupes may remove more
+        with pytest.raises(ValueError, match="vals is required"):
+            prep.merge_delta(rows[:3], cols[:3], mode="set")
+        with pytest.raises(ValueError, match="mode"):
+            prep.merge_delta(rows[:3], cols[:3], vals[:3], mode="upsert")
+        with pytest.raises(ValueError, match="out of range"):
+            prep.merge_delta([99], [0], [1.0])
+
+    def test_set_removes_all_duplicates_at_pair(self):
+        rows = np.array([3, 3, 3], np.int64)
+        cols = np.array([5, 5, 5], np.int64)
+        vals = np.array([1., 2., 3.], np.float32)
+        prep = F.prepare(rows, cols, vals, (8, 8), CFG)
+        merge = prep.merge_delta([3], [5], [10.0], mode="set")
+        assert merge.n_removed == 3 and merge.n_added == 1
+        assert merge.prepared.nnz == 1
+        assert merge.prepared.vals[0] == np.float32(10.0)
+
+
+SPECS = [("single", 1), ("row", 3), ("col", 2)]
+
+
+class TestPlanApplyDelta:
+    @pytest.mark.parametrize("cfg", [CFG, SPILL_CFG], ids=["plain", "spill"])
+    @pytest.mark.parametrize("part,n", SPECS)
+    @pytest.mark.parametrize("mode", ["add", "set", "delete"])
+    def test_identical_to_cold_plan(self, cfg, part, n, mode):
+        m, k = 96, 300
+        rows, cols, vals = coo(m, k, 800, seed=5)
+        spec = P.PlanSpec(part, n)
+        prep = F.prepare(rows, cols, vals, (m, k), cfg)
+        plan = P.plan_from_prepared(prep, spec)
+        dr, dc, dv = make_delta(rows, cols, m, k, 30, seed=6, overlap=10)
+        new_plan, merge, slots = P.plan_apply_delta(plan, prep, dr, dc, dv,
+                                                    mode=mode)
+        rr, cc, vv = post_delta_triples(rows, cols, vals, dr, dc, dv,
+                                        k, mode)
+        assert_plans_identical(new_plan, P.make_plan(rr, cc, vv, (m, k),
+                                                     cfg, spec))
+        assert slots > 0
+        # The old plan is untouched (in-flight operators keep serving it).
+        assert_plans_identical(plan, P.plan_from_prepared(prep, spec))
+
+    def test_chained_updates_stay_identical(self):
+        """Splice-of-a-splice: repeated small deltas never drift."""
+        m, k = 64, 256
+        rows, cols, vals = coo(m, k, 400, seed=7)
+        prep = F.prepare(rows, cols, vals, (m, k), SPILL_CFG)
+        plan = P.plan_from_prepared(prep, P.PlanSpec("row", 2))
+        for step, mode in enumerate(("add", "set", "add", "delete")):
+            dr, dc, dv = make_delta(rows, cols, m, k, 20, seed=10 + step,
+                                    overlap=8)
+            plan, merge, _ = P.plan_apply_delta(plan, prep, dr, dc, dv,
+                                                mode=mode)
+            prep = merge.prepared
+            rows, cols, vals = post_delta_triples(rows, cols, vals, dr, dc,
+                                                  dv, k, mode)
+            assert_plans_identical(plan, P.make_plan(
+                rows, cols, vals, (m, k), SPILL_CFG, P.PlanSpec("row", 2)))
+
+    def test_delta_into_empty_segment_and_empty_base(self):
+        m, k = 64, 512
+        rows = np.array([3, 9, 17], np.int64)
+        cols = np.array([5, 70, 200], np.int64)
+        vals = np.ones(3, np.float32)
+        prep = F.prepare(rows, cols, vals, (m, k), CFG)
+        plan = P.plan_from_prepared(prep, P.PlanSpec())
+        # Insert into segment 7 (previously no tiles at all).
+        p2, _, _ = P.plan_apply_delta(plan, prep, [8], [480], [2.0])
+        cold = P.make_plan(np.append(rows, 8), np.append(cols, 480),
+                           np.append(vals, 2.0).astype(np.float32),
+                           (m, k), CFG, P.PlanSpec())
+        assert_plans_identical(p2, cold)
+        # Delete everything, then grow back from the emptied plan.
+        p3, m3, _ = P.plan_apply_delta(plan, prep, rows, cols,
+                                       mode="delete")
+        assert p3.nnz == 0
+        z = np.zeros(0, np.int64)
+        assert_plans_identical(p3, P.make_plan(z, z,
+                                               np.zeros(0, np.float32),
+                                               (m, k), CFG, P.PlanSpec()))
+        p4, _, _ = P.plan_apply_delta(p3, m3.prepared, rows, cols, vals)
+        assert_plans_identical(p4, P.plan_from_prepared(
+            F.prepare(rows, cols, vals, (m, k), CFG), P.PlanSpec()))
+
+    def test_matvec_matches_dense_after_update(self):
+        from repro.core.spmv import SerpensOperator
+        m, k = 96, 200
+        rows, cols, vals = coo(m, k, 600, seed=8)
+        prep = F.prepare(rows, cols, vals, (m, k), CFG)
+        plan = P.plan_from_prepared(prep, P.PlanSpec("row", 2))
+        dr, dc, dv = make_delta(rows, cols, m, k, 25, seed=9, overlap=5)
+        new_plan, _, _ = P.plan_apply_delta(plan, prep, dr, dc, dv)
+        op = SerpensOperator(new_plan)
+        dense = np.zeros((m, k), np.float32)
+        np.add.at(dense, (rows, cols), vals)
+        np.add.at(dense, (dr, dc), dv)
+        x = np.random.default_rng(1).normal(size=k).astype(np.float32)
+        np.testing.assert_allclose(np.asarray(op.matvec(x)), dense @ x,
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestRegistryUpdate:
+    def make(self, seed=11, m=48, k=200, nnz=500):
+        rows, cols, vals = coo(m, k, nnz, seed)
+        reg = MatrixRegistry(config=CFG)
+        mid = reg.put(rows, cols, vals, (m, k), matrix_id="w")
+        return reg, mid, (rows, cols, vals), (m, k)
+
+    def test_update_matches_cold_put_and_versions(self):
+        reg, mid, (rows, cols, vals), (m, k) = self.make()
+        old_content = reg._entries[mid].content
+        dr, dc, dv = make_delta(rows, cols, m, k, 20, seed=12, overlap=6)
+        assert reg.update(mid, dr, dc, dv) == mid
+        assert reg.version(mid) == 1
+        assert reg._entries[mid].content != old_content
+        rr, cc, vv = post_delta_triples(rows, cols, vals, dr, dc, dv,
+                                        k, "add")
+        reg2 = MatrixRegistry(config=CFG)
+        mid2 = reg2.put(rr, cc, vv, (m, k))
+        assert_plans_identical(reg.get(mid).plan, reg2.get(mid2).plan)
+        st = reg.stats_snapshot()
+        assert st.delta_encodes == 1 and st.delta_slots > 0
+        assert st.delta_slots_per_s > 0
+        assert reg.encode_stats()[mid]["version"] == 1
+
+    def test_content_chain_is_deterministic(self):
+        rega, mida, (rows, cols, vals), (m, k) = self.make(seed=13)
+        regb = MatrixRegistry(config=CFG)
+        midb = regb.put(rows, cols, vals, (m, k), matrix_id="w")
+        dr, dc, dv = make_delta(rows, cols, m, k, 10, seed=14, overlap=3)
+        rega.update(mida, dr, dc, dv)
+        regb.update(midb, dr, dc, dv)
+        assert rega._entries[mida].content == regb._entries[midb].content
+        # A different delta forks the chain.
+        regb.update(midb, dr, dc, dv + 1.0)
+        rega.update(mida, dr, dc, dv)
+        assert rega._entries[mida].content != regb._entries[midb].content
+
+    def test_update_invalidates_bindings_but_not_inflight_ops(self):
+        reg, mid, (rows, cols, vals), (m, k) = self.make(seed=15)
+        op_old = reg.get(mid)
+        dense_old = op_old.to_dense()
+        dr, dc, dv = make_delta(rows, cols, m, k, 15, seed=16, overlap=4)
+        reg.update(mid, dr, dc, dv)
+        op_new = reg.get(mid)
+        assert op_new is not op_old
+        x = np.random.default_rng(2).normal(size=k).astype(np.float32)
+        # The captured operator still serves the pre-update matrix.
+        np.testing.assert_allclose(np.asarray(op_old.matvec(x)),
+                                   dense_old @ x, rtol=1e-4, atol=1e-4)
+        dense_new = dense_old.copy()
+        np.add.at(dense_new, (dr, dc), dv)
+        np.testing.assert_allclose(np.asarray(op_new.matvec(x)),
+                                   dense_new @ x, rtol=1e-4, atol=1e-4)
+
+    def test_update_refreshes_all_cached_plans(self, monkeypatch):
+        """An entry repartitioned for a mesh updates every cached plan."""
+        import jax
+
+        reg, mid, (rows, cols, vals), (m, k) = self.make(seed=17, m=64,
+                                                         k=64)
+        # Force a second cached plan (row/1) alongside the primary.
+        monkeypatch.setattr(MatrixRegistry, "_find_plan",
+                            staticmethod(lambda entry, spec: None))
+        mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("x",))
+        reg.get(mid, mesh=mesh, axis="x", partition="row")
+        monkeypatch.undo()
+        assert len(reg._entries[mid].plans) == 2
+        dr, dc, dv = make_delta(rows, cols, m, k, 12, seed=18, overlap=4)
+        reg.update(mid, dr, dc, dv)
+        rr, cc, vv = post_delta_triples(rows, cols, vals, dr, dc, dv,
+                                        k, "add")
+        cold_prep = F.prepare(rr, cc, vv, (m, k), CFG)
+        for spec, plan in reg._entries[mid].plans.items():
+            assert_plans_identical(plan, P.plan_from_prepared(cold_prep,
+                                                              spec))
+        # And the refreshed mesh binding serves the new matrix.
+        dense = np.zeros((m, k), np.float32)
+        np.add.at(dense, (rr, cc), vv)
+        op = reg.get(mid, mesh=mesh, axis="x", partition="row")
+        x = np.random.default_rng(3).normal(size=k).astype(np.float32)
+        np.testing.assert_allclose(np.asarray(op.matvec(x)), dense @ x,
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_noop_update_keeps_version_and_bindings(self):
+        reg, mid, (rows, cols, vals), (m, k) = self.make(seed=25)
+        op = reg.get(mid)
+        # Deleting pairs that are not present changes nothing: no version
+        # bump, no mesh-binding invalidation, no delta stats.
+        absent = np.setdiff1d(np.arange(m * k, dtype=np.int64),
+                              rows * k + cols)[:4]
+        reg.update(mid, absent // k, absent % k, mode="delete")
+        assert reg.version(mid) == 0
+        assert reg.get(mid) is op
+        assert reg.stats_snapshot().delta_encodes == 0
+
+    def test_update_missing_raises(self):
+        reg = MatrixRegistry(config=CFG)
+        with pytest.raises(KeyError, match="nope"):
+            reg.update("nope", [0], [0], [1.0])
+
+    def test_degraded_update_without_prepared(self):
+        reg, mid, (rows, cols, vals), (m, k) = self.make(seed=19)
+        reg._entries[mid].prepared = None   # as if dropped under pressure
+        dr, dc, dv = make_delta(rows, cols, m, k, 10, seed=20, overlap=2)
+        reg.update(mid, dr, dc, dv, mode="set")
+        rr, cc, vv = post_delta_triples(rows, cols, vals, dr, dc, dv,
+                                        k, "set")
+        dense = np.zeros((m, k), np.float32)
+        np.add.at(dense, (rr, cc), vv)
+        np.testing.assert_allclose(reg.get(mid).to_dense(), dense,
+                                   rtol=1e-5, atol=1e-5)
+        assert reg.version(mid) == 1
+
+    def test_update_adjusts_byte_accounting(self):
+        reg, mid, (rows, cols, vals), (m, k) = self.make(seed=21)
+        before = reg.bytes_in_use
+        # Grow the matrix substantially: bytes must grow and stay exact.
+        dr, dc, dv = coo(m, k, 400, seed=22)
+        reg.update(mid, dr, dc, dv)
+        entry = reg._entries[mid]
+        assert reg.bytes_in_use == entry.total_bytes > before
+
+    def test_concurrent_updates_all_land(self):
+        reg, mid, (rows, cols, vals), (m, k) = self.make(seed=23)
+        errs = []
+
+        def worker(i):
+            try:
+                reg.update(mid, [i % m], [i % k], [1.0])
+            except Exception as e:   # pragma: no cover
+                errs.append(e)
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errs
+        assert reg.version(mid) == 8
+        dense = np.zeros((m, k), np.float32)
+        np.add.at(dense, (rows, cols), vals)
+        for i in range(8):
+            dense[i % m, i % k] += 1.0
+        np.testing.assert_allclose(reg.get(mid).to_dense(), dense,
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestServiceUpdate:
+    def make(self, seed=31, max_bucket=4):
+        rows, cols, vals = coo(48, 200, 500, seed)
+        reg = MatrixRegistry(config=CFG)
+        mid = reg.put(rows, cols, vals, (48, 200), matrix_id="w")
+        return (SpMVService(reg, max_bucket=max_bucket), reg, mid,
+                (rows, cols, vals))
+
+    def test_inflight_keeps_old_version_new_submits_see_new(self):
+        svc, reg, mid, (rows, cols, vals) = self.make()
+        dense_old = reg.get(mid).to_dense()
+        rng = np.random.default_rng(32)
+        x = rng.normal(size=200).astype(np.float32)
+        t_old = svc.submit(mid, x)
+        dr, dc, dv = make_delta(rows, cols, 48, 200, 10, seed=33, overlap=3)
+        svc.update(mid, dr, dc, dv)
+        t_new = svc.submit(mid, x)
+        res = svc.flush()
+        dense_new = dense_old.copy()
+        np.add.at(dense_new, (dr, dc), dv)
+        np.testing.assert_allclose(res[t_old].y, dense_old @ x,
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(res[t_new].y, dense_new @ x,
+                                   rtol=1e-4, atol=1e-4)
+        # Same id, different versions: never coalesced into one batch.
+        assert res[t_old].batch_size == 1 and res[t_new].batch_size == 1
+        snap = svc.snapshot()
+        assert snap["delta_encodes"] == 1 and snap["delta_slots_per_s"] > 0
+
+    def test_flush_failure_with_interleaved_update(self, monkeypatch):
+        """A mid-flush backend failure must re-queue everything and roll
+        stats back even when an update() landed between the submits, and
+        the retry must serve each ticket against its captured version."""
+        svc, reg, mid, (rows, cols, vals) = self.make(seed=34)
+        dense_old = reg.get(mid).to_dense()
+        rng = np.random.default_rng(35)
+        xa = rng.normal(size=(2, 200)).astype(np.float32)
+        xb = rng.normal(size=(2, 200)).astype(np.float32)
+        ta = [svc.submit(mid, x) for x in xa]     # old version
+        dr, dc, dv = make_delta(rows, cols, 48, 200, 8, seed=36, overlap=2)
+        svc.update(mid, dr, dc, dv)
+        tb = [svc.submit(mid, x) for x in xb]     # new version
+        dense_new = dense_old.copy()
+        np.add.at(dense_new, (dr, dc), dv)
+        op_new = reg.get(mid)
+
+        calls = {"n": 0}
+        orig = op_new.matmat
+
+        def boom(*a, **kw):
+            calls["n"] += 1
+            raise RuntimeError("backend down")
+
+        monkeypatch.setattr(op_new, "matmat", boom)
+        with pytest.raises(RuntimeError, match="backend down"):
+            svc.flush()
+        assert calls["n"] == 1
+        # Every ticket survived; stats as if the flush never ran.
+        assert svc.pending == 4
+        st = svc.stats_snapshot()
+        assert st.batches == 0 and st.vectors == 0 and st.stream_bytes == 0
+        monkeypatch.setattr(op_new, "matmat", orig)
+        res = svc.flush()
+        assert svc.pending == 0
+        for t, x in zip(ta, xa):
+            np.testing.assert_allclose(res[t].y, dense_old @ x,
+                                       rtol=1e-4, atol=1e-4)
+        for t, x in zip(tb, xb):
+            np.testing.assert_allclose(res[t].y, dense_new @ x,
+                                       rtol=1e-4, atol=1e-4)
+        st = svc.stats_snapshot()
+        assert st.batches == 2 and st.vectors == 4
+
+    def test_failure_on_first_batch_rolls_back_nothing_served(self,
+                                                              monkeypatch):
+        svc, reg, mid, _ = self.make(seed=37)
+        rng = np.random.default_rng(38)
+        xs = rng.normal(size=(3, 200)).astype(np.float32)
+        tickets = [svc.submit(mid, x) for x in xs]
+        op = reg.get(mid)
+        monkeypatch.setattr(op, "matmat",
+                            lambda *a, **kw: (_ for _ in ()).throw(
+                                RuntimeError("down")))
+        with pytest.raises(RuntimeError):
+            svc.flush()
+        st = svc.stats_snapshot()
+        assert st.batches == 0 and st.vectors == 0 and st.stream_bytes == 0
+        assert svc.pending == 3
+        monkeypatch.undo()
+        res = svc.flush()
+        dense = op.to_dense()
+        for t, x in zip(tickets, xs):
+            np.testing.assert_allclose(res[t].y, dense @ x,
+                                       rtol=1e-4, atol=1e-4)
+
+    def test_concurrent_submit_update_flush_smoke(self):
+        """Torn-read regression: pending/snapshot race submit/update/flush
+        under threads; totals must come out exact."""
+        svc, reg, mid, (rows, cols, vals) = self.make(seed=39,
+                                                      max_bucket=8)
+        stop = threading.Event()
+        errs = []
+        served = []
+
+        def submitter(seed):
+            rng = np.random.default_rng(seed)
+            try:
+                for _ in range(30):
+                    svc.submit(mid, rng.normal(size=200).astype(np.float32))
+            except Exception as e:    # pragma: no cover
+                errs.append(e)
+
+        def updater():
+            try:
+                for i in range(5):
+                    svc.update(mid, [i], [i], [0.5])
+            except Exception as e:    # pragma: no cover
+                errs.append(e)
+
+        def reader():
+            while not stop.is_set():
+                assert svc.pending >= 0
+                snap = svc.snapshot()
+                assert snap["vectors"] >= 0
+
+        threads = ([threading.Thread(target=submitter, args=(40 + i,))
+                    for i in range(3)]
+                   + [threading.Thread(target=updater),
+                      threading.Thread(target=reader)])
+        for t in threads:
+            t.start()
+        for t in threads[:-1]:
+            t.join()
+        while svc.pending:
+            served.extend(svc.flush().values())
+        stop.set()
+        threads[-1].join()
+        assert not errs
+        assert len(served) == 90
+        assert svc.stats_snapshot().vectors == 90
+        assert reg.version(mid) == 5
