@@ -103,6 +103,25 @@ OPTIMIZED_CONFIG = SerpensConfig(raw_window=2, spill_hot_rows=True,
                                  lane_balance=1.1)
 
 
+def seg_of(cols, segment_width: int):
+    """Segment id of each column (shift when the width is a power of 2).
+
+    The one definition of the stream's column→segment map — shared by
+    ``prepare``/``_key_arrays``/``_encode_stream`` here and the parallel
+    encode front-end (:mod:`repro.core.parallel_encode`), whose sort keys
+    must stay bit-identical to the serial ones.
+    """
+    w = segment_width
+    return cols >> w.bit_length() - 1 if not w & (w - 1) else cols // w
+
+
+def lane_split(rows, lanes: int):
+    """(lane, lane-local row) of each row — the row→accumulator map."""
+    if not lanes & (lanes - 1):
+        return rows & (lanes - 1), rows >> lanes.bit_length() - 1
+    return rows % lanes, rows // lanes
+
+
 def _member_of_sorted(sorted_ids: np.ndarray, keys: np.ndarray,
                       id_space: int) -> np.ndarray:
     """Per-key membership in a sorted id array.
@@ -429,6 +448,35 @@ class DeltaMerge:
         return self.n_added == 0 and self.n_removed == 0
 
 
+def _key_arrays(rows, cols, shape, config: SerpensConfig):
+    """The int32 fast-path bucket arrays of :func:`prepare`.
+
+    Returns ``(bucket_key, packed, rr)`` — per-entry (segment, lane)
+    bucket key, packed stream word and lane-local row, all int32 — or
+    ``(None, None, None)`` when the geometry overflows the int32 key
+    space (prepare's int64/lexsort fallbacks).  ``packed`` alone is None
+    when a single-shard stream could not address this many rows (taller
+    matrices, row-partition only, rebuild it shard-locally).  Shared by
+    :func:`prepare` and the parallel encode front-end
+    (:mod:`repro.core.parallel_encode`), which must produce bit-identical
+    arrays.
+    """
+    m, k = int(shape[0]), int(shape[1])
+    w, lanes = config.segment_width, config.lanes
+    row_span = -(-m // lanes)                  # lane-local rows per lane
+    nbk = max(1, -(-k // w)) * lanes           # distinct bucket keys
+    if nbk * row_span >= (1 << 31):
+        return None, None, None
+    seg = seg_of(cols, w)
+    ln32, rr32 = lane_split(rows.astype(np.int32), lanes)
+    bk = seg.astype(np.int32) * np.int32(lanes) + ln32
+    pk = None
+    if row_span <= row_capacity(config):
+        cl64 = cols & (w - 1) if not w & (w - 1) else cols % w
+        pk = np.left_shift(rr32, ROW_BITS) | cl64.astype(np.int32)
+    return bk, pk, rr32
+
+
 def prepare(rows, cols, vals, shape,
             config: SerpensConfig = SerpensConfig()) -> PreparedCOO:
     """Validate COO triples and run the global bucket sort once.
@@ -440,27 +488,16 @@ def prepare(rows, cols, vals, shape,
     rows, cols, vals = _validate_coo(rows, cols, vals, shape, config)
     m, k = int(shape[0]), int(shape[1])
     w, lanes = config.segment_width, config.lanes
-    seg = cols >> w.bit_length() - 1 if not w & (w - 1) else cols // w
     row_span = -(-m // lanes)                  # lane-local rows per lane
     nbk = max(1, -(-k // w)) * lanes           # distinct bucket keys
-    bk = pk = None
-    if nbk * row_span < (1 << 31):
-        r32 = rows.astype(np.int32)
-        if not lanes & (lanes - 1):
-            ln32, rr32 = r32 & (lanes - 1), r32 >> lanes.bit_length() - 1
-        else:
-            ln32, rr32 = r32 % lanes, r32 // lanes
-        bk = seg.astype(np.int32) * np.int32(lanes) + ln32
+    bk, pk, rr32 = _key_arrays(rows, cols, (m, k), config)
+    if bk is not None:
         key = bk * np.int32(row_span) + rr32
-        if row_span <= row_capacity(config):
-            # The packed word is only meaningful when a single-shard stream
-            # could hold these rows; taller matrices (row-partition only)
-            # rebuild it shard-locally.
-            cl64 = cols & (w - 1) if not w & (w - 1) else cols % w
-            pk = np.left_shift(rr32, ROW_BITS) | cl64.astype(np.int32)
     elif nbk * row_span < (1 << 62):
+        seg = seg_of(cols, w)
         key = (seg * lanes + rows % lanes) * row_span + rows // lanes
     else:                                      # astronomically tall/wide
+        seg = seg_of(cols, w)
         return PreparedCOO(
             shape=(m, k), config=config, rows=rows, cols=cols, vals=vals,
             order=np.lexsort((rows // lanes, seg * lanes + rows % lanes)))

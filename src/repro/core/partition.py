@@ -177,8 +177,49 @@ def _stack_aux(mats: list[sformat.SerpensMatrix]):
     return rows, cols, vals
 
 
+def spec_geometry(shape, config: sformat.SerpensConfig,
+                  spec: PlanSpec) -> tuple[int, int]:
+    """(block_m, block_k) of a plan's shards.
+
+    Row shards are lane-aligned so accumulators concatenate exactly; col
+    shards are a whole number of segments so the segment-local packed
+    words of a global sort apply verbatim.
+    """
+    m, k = int(shape[0]), int(shape[1])
+    block_m, block_k = m, k
+    if spec.partition == "row":
+        block_m = -(-m // spec.num_shards)
+        block_m = -(-block_m // config.lanes) * config.lanes
+    elif spec.partition == "col":
+        segs_total = max(1, -(-k // config.segment_width))
+        block_k = (-(-segs_total // spec.num_shards)
+                   * config.segment_width)
+    return block_m, block_k
+
+
+def finish_plan(shards: list[sformat.SerpensMatrix], shape,
+                config: sformat.SerpensConfig, spec: PlanSpec,
+                block_m: int, block_k: int) -> ChannelShardPlan:
+    """Stack per-shard streams into a :class:`ChannelShardPlan` (the shared
+    tail of the serial and parallel encode paths)."""
+    # All shards must agree on segment count for a uniform x reshape.
+    num_segments = max(sm.num_segments for sm in shards)
+    for sm in shards:
+        sm.num_segments = num_segments
+    idx, val, seg_ids = _pad_stack(shards)
+    aux_r, aux_c, aux_v = _stack_aux(shards)
+    return ChannelShardPlan(
+        shape=(int(shape[0]), int(shape[1])), config=config, spec=spec,
+        shards=shards, block_m=block_m, block_k=block_k,
+        num_segments_local=num_segments,
+        idx=idx, val=val, seg_ids=seg_ids,
+        aux_rows=aux_r, aux_cols=aux_c, aux_vals=aux_v)
+
+
 def plan_from_prepared(prep: sformat.PreparedCOO,
-                       spec: PlanSpec = PlanSpec()) -> ChannelShardPlan:
+                       spec: PlanSpec = PlanSpec(), *,
+                       n_workers: int = 1,
+                       pool=None) -> ChannelShardPlan:
     """Encode a prepared COO into a channel-shard plan via one shared pass.
 
     All shards come out of a single bucketed ``format._encode_stream`` call
@@ -186,20 +227,26 @@ def plan_from_prepared(prep: sformat.PreparedCOO,
     inherits it verbatim (the shard key is a prefix function of the segment
     key) and a ``row`` plan derives its order with one extra stable pass
     over the shard key — never N independent ``encode()`` sorts.
+
+    ``n_workers > 1`` shards that pass by (shard, segment) range over
+    worker processes (:mod:`repro.core.parallel_encode`) — bit-identical
+    output, useful for 1e7+-nnz matrices on multi-core hosts.  ``pool``
+    optionally reuses a persistent
+    :class:`~repro.core.parallel_encode.EncodePool`.
     """
+    if n_workers > 1 and prep.nnz > 0:
+        from repro.core import parallel_encode as penc
+        return penc.plan_from_prepared_parallel(
+            prep, spec, n_workers=n_workers, pool=pool)
     cfg = prep.config
     m, k = prep.shape
     n = spec.num_shards
-    w = cfg.segment_width
     rows, cols, vals = prep.rows, prep.cols, prep.vals
 
-    block_m, block_k = m, k
+    block_m, block_k = spec_geometry((m, k), cfg, spec)
     if spec.partition == "row":
-        # Contiguous row blocks, locally re-indexed; block_m is a lane
-        # multiple so shard accumulators concatenate exactly (and the lane
+        # Contiguous row blocks, locally re-indexed (lane-aligned: the lane
         # of a row is invariant under the shard offset).
-        block_m = -(-m // n)
-        block_m = -(-block_m // cfg.lanes) * cfg.lanes
         shard = rows // block_m
         order = prep.order[np.argsort(shard[prep.order], kind="stable")]
         shards = sformat._encode_stream(
@@ -207,8 +254,6 @@ def plan_from_prepared(prep: sformat.PreparedCOO,
             n, (block_m, k), cfg)
     elif spec.partition == "col":
         # Contiguous column (segment) blocks; x shards, partial y's sum.
-        segs_total = max(1, -(-k // w))
-        block_k = -(-segs_total // n) * w
         shard = cols // block_k
         # block_k is a whole number of segments, so the bucket key and the
         # packed stream word of the prepared sort apply verbatim.
@@ -218,18 +263,7 @@ def plan_from_prepared(prep: sformat.PreparedCOO,
             bk_a=prep.bucket_key, pk_a=prep.packed)
     else:  # single
         shards = [sformat.encode_prepared(prep)]
-
-    # All shards must agree on segment count for a uniform x reshape.
-    num_segments = max(sm.num_segments for sm in shards)
-    for sm in shards:
-        sm.num_segments = num_segments
-    idx, val, seg_ids = _pad_stack(shards)
-    aux_r, aux_c, aux_v = _stack_aux(shards)
-    return ChannelShardPlan(
-        shape=(m, k), config=cfg, spec=spec, shards=shards,
-        block_m=block_m, block_k=block_k, num_segments_local=num_segments,
-        idx=idx, val=val, seg_ids=seg_ids,
-        aux_rows=aux_r, aux_cols=aux_c, aux_vals=aux_v)
+    return finish_plan(shards, (m, k), cfg, spec, block_m, block_k)
 
 
 def plan_apply_delta(
@@ -359,16 +393,30 @@ def make_plan(
     spec: PlanSpec = PlanSpec(),
     *,
     prepared: sformat.PreparedCOO | None = None,
+    n_workers: int = 1,
+    pool=None,
 ) -> ChannelShardPlan:
     """Split a COO matrix into a channel-shard plan and encode every shard.
 
     Pass ``prepared`` (from :func:`repro.core.format.prepare`) to skip
     validation and reuse its global (segment, lane) sort — how the registry
     repartitions a cached matrix without re-sorting from scratch.
+
+    ``n_workers > 1`` runs the bucket sort *and* the stream encode sharded
+    by (shard, segment) range over worker processes
+    (:mod:`repro.core.parallel_encode`); the result is bit-identical to the
+    serial encode.
     """
     if prepared is None:
+        if n_workers > 1:
+            from repro.core import parallel_encode as penc
+            _, plan = penc.prepare_and_plan(
+                rows, cols, vals, shape, config, spec,
+                n_workers=n_workers, pool=pool, want_prepared=False)
+            return plan
         prepared = sformat.prepare(rows, cols, vals, shape, config)
     elif (prepared.shape != (int(shape[0]), int(shape[1]))
           or prepared.config != config):
         raise ValueError("prepared COO does not match shape/config")
-    return plan_from_prepared(prepared, spec)
+    return plan_from_prepared(prepared, spec, n_workers=n_workers,
+                              pool=pool)

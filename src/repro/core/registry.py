@@ -25,10 +25,12 @@ import hashlib
 import threading
 import time
 from collections import OrderedDict
+from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
 from repro.core import format as sformat
+from repro.core import parallel_encode as penc
 from repro.core import partition as cpart
 from repro.core.spmv import SerpensOperator
 
@@ -93,6 +95,10 @@ class RegistryStats:
     delta_seconds: float = 0.0
     delta_slots: int = 0            # stream slots respliced by updates
     prepared_drops: int = 0         # PreparedCOO dropped under byte pressure
+    bindings_dropped: int = 0       # mesh bindings shed under byte pressure
+    background_puts: int = 0        # put(blocking=False) encodes completed
+    queue_seconds: float = 0.0      # background submit -> encode-start wait
+    device_bytes_in_use: int = 0    # bound-operator bytes (stats_snapshot)
 
     @property
     def hit_rate(self) -> float:
@@ -127,6 +133,7 @@ class _Entry:
     prepared: object = None
     encode_seconds: float = 0.0     # host wall-time spent encoding this entry
     encode_slots: int = 0           # stream slots those encodes produced
+    queue_seconds: float = 0.0      # background-put queue wait (0 if sync)
     version: int = 0                # bumped by every update() on this entry
     delta_encodes: int = 0          # incremental updates applied
     delta_seconds: float = 0.0      # wall-time of those incremental encodes
@@ -142,9 +149,17 @@ class _Entry:
         return 0 if self.prepared is None else int(self.prepared.nbytes)
 
     @property
+    def device_bytes(self) -> int:
+        """Device buffer bytes held by this entry's cached operator
+        bindings (every plan an operator was built for keeps its streams
+        resident on device)."""
+        return sum(op.device_bytes for op in self.ops.values())
+
+    @property
     def total_bytes(self) -> int:
-        """What the byte budget charges: encoded streams + prepared COO."""
-        return self.stream_bytes + self.prepared_bytes
+        """What the byte budget charges: encoded streams + prepared COO
+        + device buffers of cached mesh/operator bindings."""
+        return self.stream_bytes + self.prepared_bytes + self.device_bytes
 
     @property
     def encode_slots_per_s(self) -> float:
@@ -157,30 +172,66 @@ class _Entry:
                 if self.delta_seconds else 0.0)
 
 
-class MatrixRegistry:
-    """LRU cache of ready-to-run channel-shard plans, bounded by stream bytes.
+@dataclasses.dataclass
+class _PendingEncode:
+    """A put(blocking=False) whose encode has not installed an entry yet."""
 
-    ``byte_budget`` caps the total host bytes an entry keeps resident: the
+    content: str                    # content key the job will install
+    shape: tuple[int, int]
+    submit_time: float              # perf_counter at put()
+    done: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+    error: BaseException | None = None
+    cancelled: bool = False         # evicted/replaced before install
+
+
+class MatrixRegistry:
+    """LRU cache of ready-to-run channel-shard plans, bounded by bytes.
+
+    ``byte_budget`` caps the total bytes an entry keeps resident: the
     encoded streams (``stream_bytes`` — the off-chip footprint the paper's
-    bandwidth model is written in) *plus* the entry's ``PreparedCOO``
-    arrays (triples + bucket sort), which for low-padding matrices exceed
-    the stream itself.  When an insert pushes the total over budget,
-    pressure is shed in two stages: first the prepared arrays of
-    least-recently-used entries are dropped (the entry still serves;
-    repartition/update degrade to the decode-and-re-encode path), then
-    whole LRU entries are evicted — except the entry being inserted, so a
-    single over-budget matrix still serves (with a warning in the stats
-    via ``over_budget``).
+    bandwidth model is written in), the entry's ``PreparedCOO`` arrays
+    (triples + bucket sort), which for low-padding matrices exceed the
+    stream itself, *and* the device buffers of cached operator/mesh
+    bindings (``device_bytes_in_use``).  When an insert pushes the total
+    over budget, pressure is shed in three stages: cached bindings of
+    least-recently-used entries are dropped first (device memory released;
+    the next ``get`` re-binds), then prepared arrays (the entry still
+    serves; repartition/update degrade to the decode-and-re-encode path),
+    then whole LRU entries are evicted — except the entry being inserted,
+    so a single over-budget matrix still serves (with a warning in the
+    stats via ``over_budget``).
+
+    ``n_workers > 1`` encodes matrices with ≥ ``min_parallel_nnz``
+    non-zeros range-sharded over a process pool (bit-identical streams;
+    see :mod:`repro.core.parallel_encode`), and ``put(blocking=False)``
+    runs any encode on a background thread so the serving tier never
+    stalls a dispatcher on a registry miss.
     """
 
     def __init__(self, byte_budget: int = 1 << 31,
                  config: sformat.SerpensConfig = sformat.SerpensConfig(),
-                 backend: str = "auto"):
+                 backend: str = "auto", *, n_workers: int = 1,
+                 encode_pool: penc.EncodePool | None = None,
+                 min_parallel_nnz: int = 1 << 21,
+                 background_threads: int = 2):
         if byte_budget <= 0:
             raise ValueError("byte_budget must be positive")
         self.byte_budget = int(byte_budget)
         self.default_config = config
         self.default_backend = backend
+        # Parallel encode: matrices with >= min_parallel_nnz non-zeros
+        # encode range-sharded over n_workers processes (below that the
+        # in-process pipeline wins — see README "Parallel encode").
+        self.n_workers = max(1, int(n_workers))
+        self.min_parallel_nnz = int(min_parallel_nnz)
+        self._pool = encode_pool
+        self._owns_pool = encode_pool is None
+        # Background (put(blocking=False)) encodes run on these threads;
+        # each may itself fan out over the process pool.
+        self._background_threads = max(1, int(background_threads))
+        self._executor: ThreadPoolExecutor | None = None
+        self._pending: dict[str, _PendingEncode] = {}
         self.stats = RegistryStats()
         self._entries: "OrderedDict[str, _Entry]" = OrderedDict()
         self._bytes = 0
@@ -212,6 +263,12 @@ class MatrixRegistry:
             return sum(e.prepared_bytes for e in self._entries.values())
 
     @property
+    def device_bytes_in_use(self) -> int:
+        """Device buffer bytes held by cached operator/mesh bindings."""
+        with self._lock:
+            return sum(e.device_bytes for e in self._entries.values())
+
+    @property
     def over_budget(self) -> bool:
         with self._lock:
             return self._bytes > self.byte_budget
@@ -224,9 +281,13 @@ class MatrixRegistry:
     def stats_snapshot(self) -> RegistryStats:
         """Consistent copy of the aggregate stats (reads under the lock —
         the raw ``stats`` object is mutated field-by-field by concurrent
-        puts, so derived ratios read from it can tear)."""
+        puts, so derived ratios read from it can tear).  The snapshot's
+        ``device_bytes_in_use`` is filled in from the live bindings."""
         with self._lock:
-            return dataclasses.replace(self.stats)
+            snap = dataclasses.replace(self.stats)
+            snap.device_bytes_in_use = sum(
+                e.device_bytes for e in self._entries.values())
+            return snap
 
     def encode_stats(self) -> dict[str, dict]:
         """Per-entry encode economics: wall-time and slot throughput.
@@ -239,6 +300,7 @@ class MatrixRegistry:
             return {key: {"encode_seconds": e.encode_seconds,
                           "encode_slots": e.encode_slots,
                           "slots_per_s": e.encode_slots_per_s,
+                          "queue_seconds": e.queue_seconds,
                           "version": e.version,
                           "delta_encodes": e.delta_encodes,
                           "delta_seconds": e.delta_seconds,
@@ -251,41 +313,64 @@ class MatrixRegistry:
             return self._entries[matrix_id].version
 
     # -- core API ---------------------------------------------------------
-    def put(self, rows, cols, vals, shape, *, config=None, backend=None,
-            matrix_id: str | None = None, partition: str = "single",
-            num_shards: int = 1) -> str:
-        """Ensure the matrix's plan is cached; return its id.
-
-        A repeat ``put`` of the same content + geometry is a *hit*: the
-        encode does not re-run.  ``partition``/``num_shards`` choose the
-        channel-shard geometry (part of the content key).  Pass
-        ``matrix_id`` to name the entry explicitly (e.g. a model/layer
-        path); otherwise the content hash is the id.  Re-using an explicit
-        id with *different* content replaces the entry (a miss) rather than
-        silently serving the stale matrix.
-        """
-        cfg = config or self.default_config
-        spec = cpart.PlanSpec(partition, num_shards)
-        ck = content_key(rows, cols, vals, shape, cfg, spec)
-        key = matrix_id or ck
+    def _encode_pool(self) -> penc.EncodePool | None:
+        """The persistent worker pool (lazily created when n_workers>1)."""
         with self._lock:
-            entry = self._entries.get(key)
-            if entry is not None and entry.content == ck:
-                self.stats.hits += 1
-                self._entries.move_to_end(key)
-                return key
-        # Encode outside the lock — it is the slow part and pure.
-        be = backend or self.default_backend
+            if self.n_workers > 1 and self._pool is None:
+                self._pool = penc.EncodePool(self.n_workers)
+            return self._pool
+
+    def _get_executor(self) -> ThreadPoolExecutor:
+        with self._lock:
+            if self._executor is None:
+                self._executor = ThreadPoolExecutor(
+                    max_workers=self._background_threads,
+                    thread_name_prefix="registry-encode")
+            return self._executor
+
+    def close(self) -> None:
+        """Release the worker pool / background threads (entries remain).
+
+        The executor drains first: an in-flight background encode may
+        still lazily (re)create the pool via ``_encode_pool``, so the
+        pool is only captured and closed once no job can run.
+        """
+        with self._lock:
+            executor, self._executor = self._executor, None
+        if executor is not None:
+            executor.shutdown(wait=True)
+        with self._lock:
+            pool = self._pool if self._owns_pool else None
+            if self._owns_pool:
+                self._pool = None
+        if pool is not None:
+            pool.close()
+
+    def _encode_plan(self, rows, cols, vals, shape, cfg, spec, be):
+        """prepare + encode + bind (the pure, slow part; no lock held).
+
+        Large matrices fan out over the process pool
+        (:func:`repro.core.parallel_encode.prepare_and_plan` — bit-identical
+        to the serial encode); returns (prep, plan, op, seconds, slots).
+        """
         t0 = time.perf_counter()
-        prep = sformat.prepare(rows, cols, vals, shape, cfg)
-        plan = cpart.plan_from_prepared(prep, spec)
+        nw = (self.n_workers
+              if np.asarray(rows).size >= self.min_parallel_nnz else 1)
+        prep, plan = penc.prepare_and_plan(
+            rows, cols, vals, shape, cfg, spec, n_workers=nw,
+            pool=self._encode_pool() if nw > 1 else None)
         op = SerpensOperator(plan, backend=be)
         dt = time.perf_counter() - t0
-        slots = int(plan.idx.size)
+        return prep, plan, op, dt, int(plan.idx.size)
+
+    def _install(self, key, ck, spec, be, prep, plan, op, dt, slots,
+                 queue_wait: float = 0.0) -> str:
+        """Book-keep one finished encode (caller does NOT hold the lock)."""
         with self._lock:
             self.stats.encode_seconds += dt
             self.stats.encodes += 1
             self.stats.encode_slots += slots
+            self.stats.queue_seconds += queue_wait
             entry = self._entries.get(key)
             if entry is not None and entry.content == ck:
                 self.stats.hits += 1       # raced with another thread
@@ -299,8 +384,171 @@ class MatrixRegistry:
                                      plans={spec: plan},
                                      ops={(spec, None, None): op},
                                      prepared=prep, encode_seconds=dt,
-                                     encode_slots=slots))
+                                     encode_slots=slots,
+                                     queue_seconds=queue_wait))
         return key
+
+    def put(self, rows, cols, vals, shape, *, config=None, backend=None,
+            matrix_id: str | None = None, partition: str = "single",
+            num_shards: int = 1, blocking: bool = True) -> str:
+        """Ensure the matrix's plan is cached; return its id.
+
+        A repeat ``put`` of the same content + geometry is a *hit*: the
+        encode does not re-run.  ``partition``/``num_shards`` choose the
+        channel-shard geometry (part of the content key).  Pass
+        ``matrix_id`` to name the entry explicitly (e.g. a model/layer
+        path); otherwise the content hash is the id.  Re-using an explicit
+        id with *different* content replaces the entry (a miss) rather than
+        silently serving the stale matrix.
+
+        ``blocking=False`` returns the id immediately and runs the encode
+        on a background thread (which may itself fan out over the process
+        pool): poll :meth:`ready`, or let :meth:`get` block until the
+        entry installs.  The triples are copied at submit, so the caller
+        may mutate its buffers right away.  Stats record the queue wait
+        (submit → encode start) separately from encode wall-time.
+        """
+        cfg = config or self.default_config
+        spec = cpart.PlanSpec(partition, num_shards)
+        ck = content_key(rows, cols, vals, shape, cfg, spec)
+        key = matrix_id or ck
+        be = backend or self.default_backend
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None and entry.content == ck:
+                self.stats.hits += 1
+                self._entries.move_to_end(key)
+                return key
+            pending = self._pending.get(key)
+            same_pending = (pending is not None and pending.content == ck
+                            and not pending.cancelled
+                            and pending.error is None)
+            if pending is not None and not same_pending:
+                # Same name, new content (or failed job): supersede it.
+                pending.cancelled = True
+                self._pending.pop(key, None)
+                pending = None
+            if not blocking:
+                if same_pending:
+                    return key             # identical encode already queued
+                pending = _PendingEncode(
+                    content=ck,
+                    shape=(int(shape[0]), int(shape[1])),
+                    submit_time=time.perf_counter())
+                self._pending[key] = pending
+                # Copy at submit: the encode reads these after we return.
+                args = (np.array(rows, np.int64), np.array(cols, np.int64),
+                        np.array(vals, np.float32),
+                        (int(shape[0]), int(shape[1])))
+                self._get_executor().submit(
+                    self._background_encode, key, pending, args, cfg,
+                    spec, be)
+                return key
+        if same_pending:                   # blocking put over a queued twin
+            pending.done.wait()
+            with self._lock:
+                if pending.error is not None:
+                    raise RuntimeError(
+                        f"background encode of {key!r} failed"
+                    ) from pending.error
+                entry = self._entries.get(key)
+                if entry is not None and entry.content == ck:
+                    return key
+            # The twin was cancelled (evict/clear mid-encode) — a blocking
+            # put still promises a cached entry, so encode it ourselves.
+        # Encode outside the lock — it is the slow part and pure.
+        prep, plan, op, dt, slots = self._encode_plan(
+            rows, cols, vals, shape, cfg, spec, be)
+        return self._install(key, ck, spec, be, prep, plan, op, dt, slots)
+
+    def _background_encode(self, key, pending: _PendingEncode, args, cfg,
+                           spec, be) -> None:
+        """Executor job for put(blocking=False)."""
+        queue_wait = time.perf_counter() - pending.submit_time
+        try:
+            rows, cols, vals, shape = args
+            prep, plan, op, dt, slots = self._encode_plan(
+                rows, cols, vals, shape, cfg, spec, be)
+        except BaseException as e:          # surfaced by ready()/get()
+            with self._lock:
+                pending.error = e
+            pending.done.set()
+            return
+        with self._lock:
+            cancelled = pending.cancelled
+            if cancelled:              # evicted mid-encode: count the work
+                if self._pending.get(key) is pending:
+                    del self._pending[key]
+                self.stats.encodes += 1
+                self.stats.encode_seconds += dt
+                self.stats.encode_slots += slots
+                self.stats.queue_seconds += queue_wait
+        if not cancelled:
+            # Install BEFORE clearing the pending record: ready()/get()
+            # always see pending-or-entry, never a gap a concurrent
+            # flush would misread as "unknown matrix".
+            self._install(key, pending.content, spec, be, prep, plan, op,
+                          dt, slots, queue_wait=queue_wait)
+            with self._lock:
+                self.stats.background_puts += 1
+                if self._pending.get(key) is pending:
+                    del self._pending[key]
+                if pending.cancelled:
+                    # evict() raced the install (it found no entry to
+                    # remove yet): honor it now.
+                    entry = self._entries.get(key)
+                    if entry is not None \
+                            and entry.content == pending.content:
+                        del self._entries[key]
+                        self._bytes -= entry.total_bytes
+                        self.stats.evictions += 1
+        pending.done.set()
+
+    def ready(self, matrix_id: str) -> bool:
+        """Poll a background put: True once the entry serves, False while
+        its encode is queued/running.  Raises ``KeyError`` for unknown ids
+        and re-raises a failed background encode's error."""
+        with self._lock:
+            pending = self._pending.get(matrix_id)
+            if pending is not None:
+                if pending.error is not None:
+                    raise RuntimeError(
+                        f"background encode of {matrix_id!r} failed"
+                    ) from pending.error
+                return False
+            if matrix_id in self._entries:
+                return True
+        raise KeyError(f"matrix {matrix_id!r} not in registry")
+
+    def shape(self, matrix_id: str) -> tuple[int, int]:
+        """(M, K) of a cached or still-encoding matrix (KeyError else)."""
+        with self._lock:
+            entry = self._entries.get(matrix_id)
+            if entry is not None:
+                return tuple(entry.plans[entry.primary].shape)
+            pending = self._pending.get(matrix_id)
+            if pending is not None:
+                return tuple(pending.shape)
+        raise KeyError(f"matrix {matrix_id!r} not in registry")
+
+    def content(self, matrix_id: str) -> str:
+        """Current content hash of a cached or still-encoding matrix —
+        what a deferred serving request pins itself to, so a name
+        re-registered with new data mid-encode is detected rather than
+        silently served (KeyError for unknown ids)."""
+        with self._lock:
+            entry = self._entries.get(matrix_id)
+            if entry is not None:
+                return entry.content
+            pending = self._pending.get(matrix_id)
+            if pending is not None:
+                return pending.content
+        raise KeyError(f"matrix {matrix_id!r} not in registry")
+
+    @property
+    def pending_encodes(self) -> int:
+        with self._lock:
+            return len(self._pending)
 
     def put_operator(self, op: SerpensOperator,
                      matrix_id: str | None = None) -> str:
@@ -361,6 +609,12 @@ class MatrixRegistry:
         d_v = delta_vals if delta_vals is None else np.asarray(delta_vals)
         while True:
             with self._lock:
+                pending = self._pending.get(matrix_id)
+            if pending is not None:
+                # Update while the background encode is still running:
+                # wait for the entry to install, then apply the delta.
+                pending.done.wait()
+            with self._lock:
                 entry = self._entries.get(matrix_id)
                 if entry is None:
                     raise KeyError(
@@ -418,7 +672,8 @@ class MatrixRegistry:
             return matrix_id
 
     def get(self, matrix_id: str, *, mesh=None, axis: str | None = None,
-            partition: str | None = None) -> SerpensOperator:
+            partition: str | None = None, block: bool = True,
+            timeout: float | None = None) -> SerpensOperator:
         """Fetch a ready operator (refreshes LRU recency).
 
         Without a mesh, returns the operator for the geometry the entry was
@@ -428,7 +683,29 @@ class MatrixRegistry:
         outside the lock, like ``put``'s encode — and the new plan cached
         alongside.  Any cached 1-shard plan satisfies a 1-device axis
         regardless of partition label (the streams are identical work).
+
+        If the id names a still-encoding background put, ``get`` waits for
+        it (``timeout`` seconds at most — ``TimeoutError`` after; with
+        ``block=False`` it raises ``KeyError`` immediately instead).
         """
+        pending = None
+        with self._lock:
+            pending = self._pending.get(matrix_id)
+        if pending is not None:
+            if not block:
+                raise KeyError(
+                    f"matrix {matrix_id!r} is still encoding "
+                    f"(put(blocking=False); poll ready() or get with "
+                    f"block=True)")
+            if not pending.done.wait(timeout):
+                raise TimeoutError(
+                    f"matrix {matrix_id!r} still encoding after "
+                    f"{timeout}s")
+            with self._lock:
+                if pending.error is not None:
+                    raise RuntimeError(
+                        f"background encode of {matrix_id!r} failed"
+                    ) from pending.error
         with self._lock:
             if matrix_id not in self._entries:
                 self.stats.misses += 1
@@ -437,32 +714,46 @@ class MatrixRegistry:
             self.stats.hits += 1
             self._entries.move_to_end(matrix_id)
             entry = self._entries[matrix_id]
+            backend = entry.backend
+            content = entry.content
             if mesh is None:
                 if partition is not None:
                     raise ValueError(
                         "partition requires a mesh; without one, get() "
                         "returns the geometry the entry was put with")
-                return self._bind(entry, entry.plans[entry.primary],
-                                  entry.primary, None, None)
-            if axis is None:
-                raise ValueError("mesh requires axis")
-            part = partition or (
-                entry.primary.partition
-                if entry.primary.partition != "single" else "row")
-            spec = cpart.PlanSpec(part, mesh.shape[axis])
-            plan = self._find_plan(entry, spec)
+                spec = entry.primary
+                plan = entry.plans[spec]
+            else:
+                if axis is None:
+                    raise ValueError("mesh requires axis")
+                part = partition or (
+                    entry.primary.partition
+                    if entry.primary.partition != "single" else "row")
+                spec = cpart.PlanSpec(part, mesh.shape[axis])
+                plan = self._find_plan(entry, spec)
             if plan is not None:
-                return self._bind(entry, plan, spec, mesh, axis)
-            src = entry.plans[entry.primary]
-            prep = entry.prepared
-            content = entry.content
+                op = entry.ops.get((spec, mesh, axis))
+                if op is not None:
+                    return op
+            else:
+                src = entry.plans[entry.primary]
+                prep = entry.prepared
+        if plan is not None:
+            # Device transfer outside the lock, like every slow path.
+            return self._make_binding(matrix_id, content, plan, spec,
+                                      mesh, axis, backend)
         # Repartition outside the lock — the slow host-side encode must not
         # stall concurrent submit/get/put on the serving tier.  Entries put
         # as triples reuse their prepared bucketing (no decode, no re-sort);
-        # adopted operators fall back to decoding the cached stream.
+        # adopted operators fall back to decoding the cached stream.  Big
+        # matrices fan the re-encode out over the worker pool.
         t0 = time.perf_counter()
+        nw = (self.n_workers if (prep is not None and
+                                 prep.nnz >= self.min_parallel_nnz) else 1)
         if prep is not None:
-            plan = cpart.plan_from_prepared(prep, spec)
+            plan = cpart.plan_from_prepared(
+                prep, spec, n_workers=nw,
+                pool=self._encode_pool() if nw > 1 else None)
         else:
             r, c, v = src.to_coo()
             plan = cpart.make_plan(r, c, v, src.shape, src.config, spec)
@@ -482,14 +773,23 @@ class MatrixRegistry:
             cached = self._find_plan(entry, spec)
             if cached is not None:
                 plan = cached              # raced with another thread
+                op = entry.ops.get((spec, mesh, axis))
+                if op is not None:
+                    return op
             else:
                 entry.plans[spec] = plan
                 self._bytes += plan.stream_bytes
                 self._evict_over_budget(keep=matrix_id)
-            return self._bind(entry, plan, spec, mesh, axis)
+        return self._make_binding(matrix_id, content, plan, spec, mesh,
+                                  axis, backend)
 
     def evict(self, matrix_id: str) -> None:
         with self._lock:
+            pending = self._pending.pop(matrix_id, None)
+            if pending is not None:
+                # Evict while encoding: the job completes but never
+                # installs; a later get() raises KeyError.
+                pending.cancelled = True
             entry = self._entries.pop(matrix_id, None)
             if entry is not None:
                 self._bytes -= entry.total_bytes
@@ -497,6 +797,9 @@ class MatrixRegistry:
 
     def clear(self) -> None:
         with self._lock:
+            for pending in self._pending.values():
+                pending.cancelled = True
+            self._pending.clear()
             self.stats.evictions += len(self._entries)
             self._entries.clear()
             self._bytes = 0
@@ -511,21 +814,33 @@ class MatrixRegistry:
                          if p.num_shards == 1), None)
         return plan
 
-    def _bind(self, entry: _Entry, plan, spec, mesh, axis
-              ) -> SerpensOperator:
-        """Cached mesh binding of a plan (caller holds the lock).
+    def _make_binding(self, key: str, content: str, plan, spec, mesh,
+                      axis, backend: str) -> SerpensOperator:
+        """Build + cache an operator binding (call WITHOUT the lock).
 
-        Bindings live for the entry's lifetime: one operator per distinct
-        (spec, mesh, axis), holding device copies of the plan's streams.
-        The byte budget tracks host plan bytes only — with many distinct
-        long-lived meshes, evict entries explicitly to release device
-        buffers.
+        The ``SerpensOperator`` construction moves the plan's streams to
+        the device — slow work that must not stall concurrent
+        submit/get/put on the registry lock.  The publish step re-checks
+        the entry: first racer's binding wins, and an entry evicted or
+        updated mid-transfer gets an uncached (but working) operator.
+
+        Bindings live until byte pressure or an update sheds them: one
+        operator per distinct (spec, mesh, axis), holding device copies of
+        the plan's streams.  Those device bytes are charged to the byte
+        budget (``device_bytes_in_use``), and bindings are the first
+        thing ``_evict_over_budget`` drops.
         """
-        op = entry.ops.get((spec, mesh, axis))
-        if op is None:
-            op = SerpensOperator(plan, mesh=mesh, axis=axis,
-                                 backend=entry.backend)
+        op = SerpensOperator(plan, mesh=mesh, axis=axis, backend=backend)
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None or entry.content != content:
+                return op      # evicted/updated mid-transfer: uncached
+            cached = entry.ops.get((spec, mesh, axis))
+            if cached is not None:
+                return cached
             entry.ops[(spec, mesh, axis)] = op
+            self._bytes += op.device_bytes
+            self._evict_over_budget(keep=key)
         return op
 
     def _insert(self, key: str, entry: _Entry) -> None:
@@ -537,11 +852,25 @@ class MatrixRegistry:
     def _evict_over_budget(self, keep: str) -> None:
         """Shed bytes until within budget, never evicting ``keep``.
 
-        Two-stage pressure: drop PreparedCOO arrays LRU-first (the entry
-        keeps serving; repartition and update degrade to the decode-path
-        re-encode), only then evict whole entries.  ``keep``'s prepared
-        arrays are the last to go before eviction starts.
+        Three-stage pressure, cheapest-to-rebuild first: (1) drop cached
+        operator/mesh bindings LRU-first (releases their device buffers;
+        the next ``get`` re-binds from the host plan), (2) drop
+        PreparedCOO arrays LRU-first (the entry keeps serving;
+        repartition and update degrade to the decode-path re-encode),
+        (3) evict whole entries.  ``keep``'s bindings are never shed —
+        one may have just been handed out — and its prepared arrays are
+        the last to go before eviction starts.
         """
+        if self._bytes > self.byte_budget:
+            for key in [k for k in self._entries if k != keep]:
+                if self._bytes <= self.byte_budget:
+                    break
+                e = self._entries[key]
+                db = e.device_bytes
+                if db:
+                    self._bytes -= db
+                    e.ops.clear()
+                    self.stats.bindings_dropped += 1
         if self._bytes > self.byte_budget:
             victims = [k for k in self._entries if k != keep] + \
                 ([keep] if keep in self._entries else [])

@@ -66,11 +66,23 @@ class SerpensOperator:
                 (jnp.asarray(sm.aux_rows), jnp.asarray(sm.aux_cols),
                  jnp.asarray(sm.aux_vals)) if sm.n_aux else None
                 for sm in plan.shards]
+        held = ([self._idx, self._val, self._seg, self._seg_chunk,
+                 *self._aux] if mesh is not None else
+                [a for dev in self._shards for a in dev]
+                + [a for aux in self._auxs if aux is not None for a in aux])
+        self._device_bytes = int(sum(int(a.nbytes) for a in held))
 
     # -- properties -------------------------------------------------------
     @property
     def nnz(self) -> int:
         return self.plan.nnz
+
+    @property
+    def device_bytes(self) -> int:
+        """Bytes of the device buffers this operator holds resident (the
+        streamed idx/val/seg arrays plus the aux spill triples) — what
+        the registry's byte budget charges for a live binding."""
+        return self._device_bytes
 
     @property
     def stream_bytes(self) -> int:

@@ -15,6 +15,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
+from collections import OrderedDict
 
 import numpy as np
 import jax.numpy as jnp
@@ -41,23 +42,34 @@ class SpMVRequest:
     ticket: int
     matrix_id: str
     op: object          # SerpensOperator captured at submit — a later registry
-                        # eviction cannot strand an already-queued request
+                        # eviction cannot strand an already-queued request.
+                        # None while the matrix is still background-encoding
+                        # (resolved at flush once the registry reports ready).
     x: np.ndarray
     alpha: float
     beta: float
     y: np.ndarray | None
     submit_time: float
+    # Content hash pinned at submit for deferred (op=None) requests: if
+    # the id is re-registered with different data (or updated) before the
+    # request dispatches, it fails explicitly instead of being silently
+    # served against a matrix it was never submitted to.
+    expect_content: str | None = None
 
 
 @dataclasses.dataclass
 class SpMVResult:
     """Per-request outcome + the serving economics of its batch."""
     ticket: int
-    y: np.ndarray
+    y: np.ndarray | None
     latency_s: float          # submit → result materialized
     batch_size: int           # real requests coalesced in this SpMM call
     bucket_n: int             # padded width actually dispatched
     stream_bytes_per_vector: float  # A-stream bytes / real vectors in batch
+    # Set when the request can never complete (e.g. its still-encoding
+    # matrix was evicted, or its background encode failed); ``result()``
+    # re-raises it to the collecting caller.
+    error: BaseException | None = None
 
 
 @dataclasses.dataclass
@@ -65,6 +77,8 @@ class ServiceStats:
     batches: int = 0
     stream_bytes: int = 0     # total A-stream traffic dispatched
     vectors: int = 0          # real vectors (= requests) served
+    deferred: int = 0         # requests re-queued at flush (still encoding)
+    results_dropped: int = 0  # uncollected results pruned from the store
 
     @property
     def amortized_bytes_per_vector(self) -> float:
@@ -91,13 +105,16 @@ class SpMVService:
 
     def __init__(self, registry: MatrixRegistry, max_bucket: int = 16,
                  backend: str | None = None, mesh=None,
-                 axis: str | None = None, partition: str | None = None):
+                 axis: str | None = None, partition: str | None = None,
+                 max_stored_results: int = 4096):
         if max_bucket < 1 or max_bucket & (max_bucket - 1):
             raise ValueError("max_bucket must be a power of two >= 1")
         if mesh is not None and axis is None:
             raise ValueError("mesh requires axis")
         if mesh is None and partition is not None:
             raise ValueError("partition requires mesh")
+        if max_stored_results < 1:
+            raise ValueError("max_stored_results must be >= 1")
         self.registry = registry
         self.max_bucket = max_bucket
         self.backend = backend
@@ -107,40 +124,60 @@ class SpMVService:
         self.axis = axis
         self.partition = partition
         self.stats = ServiceStats()
-        # submit() is thread-safe; flush() is meant to run on one dispatcher
-        # thread (the micro-batcher pattern).
+        # submit() is thread-safe, and flush() may run on any thread: each
+        # flush deposits finished results in a completed-results store
+        # keyed by ticket, and every caller collects *its own* tickets via
+        # result() — so one thread's flush cannot swallow another thread's
+        # requests.  Uncollected results beyond max_stored_results are
+        # pruned oldest-first (stats.results_dropped).
         self._lock = threading.Lock()
+        self._result_cv = threading.Condition(self._lock)
+        self._results: "OrderedDict[int, SpMVResult]" = OrderedDict()
+        self.max_stored_results = int(max_stored_results)
         self._pending: list[SpMVRequest] = []
         self._next_ticket = 0
 
     # -- submission -------------------------------------------------------
     def submit(self, matrix_id: str, x, alpha: float = 1.0,
                beta: float = 0.0, y=None) -> int:
-        """Queue one ``y_out = α·A·x + β·y`` request; returns a ticket."""
-        op = self.registry.get(             # validates id, refreshes LRU
-            matrix_id, mesh=self.mesh, axis=self.axis,
-            partition=self.partition)
+        """Queue one ``y_out = α·A·x + β·y`` request; returns a ticket.
+
+        Matrices still encoding in the background (``put(blocking=False)``)
+        are accepted without blocking: the request queues with no operator
+        and resolves at a later ``flush`` once the registry reports the
+        entry ready — the dispatcher thread never stalls on a cold start.
+        """
+        expect = None
+        if self.registry.ready(matrix_id):  # KeyError when unknown
+            op = self.registry.get(         # refreshes LRU
+                matrix_id, mesh=self.mesh, axis=self.axis,
+                partition=self.partition)
+            m_len, k_len = op.shape
+        else:
+            op = None                       # resolved at flush time
+            m_len, k_len = self.registry.shape(matrix_id)
+            expect = self.registry.content(matrix_id)
         # Copy on enqueue: the caller may reuse/mutate its buffer before
         # flush (np.asarray would alias an already-float32 input).
         x = np.array(x, np.float32)
-        if x.ndim != 1 or x.shape[0] != op.shape[1]:
+        if x.ndim != 1 or x.shape[0] != k_len:
             raise ValueError(
                 f"x has shape {x.shape}; matrix {matrix_id!r} needs a "
-                f"length-{op.shape[1]} vector")
+                f"length-{k_len} vector")
         if beta != 0.0 and y is None:
             raise ValueError("beta != 0 requires y")
         if y is not None:
             y = np.array(y, np.float32)
-            if y.shape != (op.shape[0],):
+            if y.shape != (m_len,):
                 raise ValueError(
-                    f"y has shape {y.shape}; expected ({op.shape[0]},)")
+                    f"y has shape {y.shape}; expected ({m_len},)")
         with self._lock:
             ticket = self._next_ticket
             self._next_ticket += 1
             self._pending.append(SpMVRequest(
                 ticket=ticket, matrix_id=matrix_id, op=op, x=x,
                 alpha=float(alpha), beta=float(beta), y=y,
-                submit_time=time.perf_counter()))
+                submit_time=time.perf_counter(), expect_content=expect))
         return ticket
 
     def update(self, matrix_id: str, delta_rows, delta_cols,
@@ -152,7 +189,11 @@ class SpMVService:
         were submitted and are served against the pre-update matrix;
         every submit after this call sees the new version.  The two
         versions never mix inside one batch — batches group on the
-        operator identity, not the id.
+        operator identity, not the id.  Requests submitted while their
+        matrix was still background-encoding hold no operator yet — they
+        pin the content hash instead, and an update (or re-put) landing
+        before they dispatch fails those tickets explicitly rather than
+        serving a version they were not submitted against.
         """
         return self.registry.update(matrix_id, delta_rows, delta_cols,
                                     delta_vals, mode=mode)
@@ -185,11 +226,14 @@ class SpMVService:
             "vectors": ss.vectors,
             "mean_batch_size": ss.mean_batch_size,
             "amortized_bytes_per_vector": ss.amortized_bytes_per_vector,
+            "deferred": ss.deferred,
             "encodes": rs.encodes,
             "encode_seconds": rs.encode_seconds,
             "mean_encode_s": (rs.encode_seconds / rs.encodes
                               if rs.encodes else 0.0),
             "encode_slots_per_s": rs.encode_slots_per_s,
+            "background_puts": rs.background_puts,
+            "queue_seconds": rs.queue_seconds,
             "delta_encodes": rs.delta_encodes,
             "delta_seconds": rs.delta_seconds,
             "delta_slots_per_s": rs.delta_slots_per_s,
@@ -197,21 +241,79 @@ class SpMVService:
 
     # -- dispatch ---------------------------------------------------------
     def flush(self) -> dict[int, SpMVResult]:
-        """Dispatch all pending requests; returns {ticket: result}.
+        """Dispatch all dispatchable pending requests; returns
+        {ticket: result} for the requests *this call* dispatched.
 
         Same-matrix requests are coalesced into SpMM calls of at most
         ``max_bucket`` vectors, padded up to the bucket width with zero
         columns (padding costs FLOPs, not A-stream traffic — the stream is
         read once per call regardless of N).
+
+        Requests whose matrix is still background-encoding stay queued for
+        a later flush (``stats.deferred``) — the flushing thread never
+        blocks on a cold start.  Every finished result is also deposited
+        in the completed-results store, so concurrent submitters collect
+        their own tickets via :meth:`result` even when *this* thread's
+        flush dispatched them.
         """
         with self._lock:
             pending, self._pending = self._pending, []
+        # Resolve requests submitted against matrices that were still
+        # encoding: ready now → bind their operator; still encoding →
+        # re-queue; gone (evicted mid-encode / encode failed) → deposit an
+        # error result for the submitter to collect.
+        ready_reqs: list[SpMVRequest] = []
+        deferred: list[SpMVRequest] = []
+        failed: list[SpMVResult] = []
+        for req in pending:
+            if req.op is None:
+                try:
+                    if not self.registry.ready(req.matrix_id):
+                        deferred.append(req)
+                        continue
+                    op = self.registry.get(
+                        req.matrix_id, mesh=self.mesh, axis=self.axis,
+                        partition=self.partition)
+                    # The request was validated against the *pending*
+                    # matrix at submit; if the id was re-registered or
+                    # updated since (content no longer what it pinned),
+                    # fail this ticket explicitly — never silently serve
+                    # a matrix the caller did not submit against, and
+                    # never let a stale-shaped x poison the whole batch.
+                    if (req.expect_content is not None
+                            and self.registry.content(req.matrix_id)
+                            != req.expect_content):
+                        raise RuntimeError(
+                            f"matrix {req.matrix_id!r} was replaced or "
+                            f"updated while its encode was pending")
+                    if req.x.shape[0] != op.shape[1] or (
+                            req.y is not None
+                            and req.y.shape[0] != op.shape[0]):
+                        raise RuntimeError(
+                            f"matrix {req.matrix_id!r} changed shape to "
+                            f"{op.shape} while its encode was pending")
+                    req.op = op
+                except Exception as e:     # noqa: BLE001 — routed to caller
+                    failed.append(SpMVResult(
+                        ticket=req.ticket, y=None, latency_s=0.0,
+                        batch_size=0, bucket_n=0,
+                        stream_bytes_per_vector=0.0, error=e))
+                    continue
+            ready_reqs.append(req)
+        if deferred or failed:
+            with self._result_cv:
+                if deferred:
+                    self._pending[:0] = deferred
+                    self.stats.deferred += len(deferred)
+                for res in failed:
+                    self._deposit(res)
+                self._result_cv.notify_all()
         # Coalesce on the operator captured at submit time: still valid even
         # if the registry evicted the id since, and two requests only share
         # a batch when they truly share a matrix (an id re-registered with
         # new content mid-queue lands in its own group).
         groups: dict[int, list[SpMVRequest]] = {}
-        for req in pending:
+        for req in ready_reqs:
             groups.setdefault(id(req.op), []).append(req)
         batches = [reqs[i:i + self.max_bucket]
                    for reqs in groups.values()
@@ -234,14 +336,83 @@ class SpMVService:
                         self.stats.stream_bytes -= done[0].op.stream_bytes
                     self._pending[:0] = [r for b in batches for r in b]
                 raise
+        with self._result_cv:
+            for res in results.values():
+                self._deposit(res)
+            self._result_cv.notify_all()
         return results
 
-    def serve(self, requests) -> list[np.ndarray]:
+    def _deposit(self, res: SpMVResult) -> None:
+        """Store a finished result for result() pickup (lock held)."""
+        self._results[res.ticket] = res
+        while len(self._results) > self.max_stored_results:
+            self._results.popitem(last=False)
+            self.stats.results_dropped += 1
+
+    def result(self, ticket: int, timeout: float | None = None
+               ) -> SpMVResult:
+        """Collect (and remove) one ticket's result from the store.
+
+        Blocks until some thread's ``flush`` deposits it — submitting
+        alone does not dispatch; a flush must run somewhere.  Raises
+        ``TimeoutError`` after ``timeout`` seconds, ``KeyError`` for
+        tickets that were never issued, and re-raises the stored error of
+        requests that can never complete.  Each ticket is collectable
+        exactly once.
+        """
+        deadline = (None if timeout is None
+                    else time.perf_counter() + timeout)
+        with self._result_cv:
+            if not 0 <= ticket < self._next_ticket:
+                raise KeyError(f"unknown ticket {ticket}")
+            while ticket not in self._results:
+                remaining = (None if deadline is None
+                             else deadline - time.perf_counter())
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(
+                        f"ticket {ticket} not completed within {timeout}s")
+                self._result_cv.wait(remaining)
+            res = self._results.pop(ticket)
+        if res.error is not None:
+            raise res.error
+        return res
+
+    def serve(self, requests, timeout: float | None = 60.0
+              ) -> list[np.ndarray]:
         """Convenience: submit an iterable of (matrix_id, x[, alpha, beta])
-        tuples, flush, and return the y's in submission order."""
+        tuples, flush, and return the y's in submission order.
+
+        Collects through the completed-results store, so concurrent
+        ``serve``/``flush`` calls on other threads can interleave freely:
+        whichever thread's flush dispatches a ticket, its submitter still
+        receives it.  Re-flushes while its matrices finish background
+        encodes; raises ``TimeoutError`` if not all results arrive within
+        ``timeout`` seconds.
+        """
         tickets = [self.submit(*r) for r in requests]
-        results = self.flush()
-        return [results[t].y for t in tickets]
+        deadline = (None if timeout is None
+                    else time.perf_counter() + timeout)
+        out: dict[int, SpMVResult] = {}
+        waiting = list(tickets)
+        while waiting:
+            flushed = self.flush()
+            for t in list(waiting):
+                try:
+                    out[t] = self.result(t, timeout=0.05)
+                except TimeoutError:
+                    # Deferred, another thread's flush, or pruned from the
+                    # bounded store — our own flush's return still has the
+                    # latter's result.
+                    if t not in flushed:
+                        continue
+                    out[t] = flushed[t]
+                waiting.remove(t)
+            if waiting and deadline is not None \
+                    and time.perf_counter() >= deadline:
+                raise TimeoutError(
+                    f"{len(waiting)} of {len(tickets)} requests not "
+                    f"served within {timeout}s")
+        return [out[t].y for t in tickets]
 
     def _dispatch(self, op, batch: list[SpMVRequest],
                   results: dict[int, SpMVResult]) -> None:

@@ -1,0 +1,395 @@
+"""Background (non-blocking) registry encodes and their race conditions.
+
+``put(blocking=False)`` returns the id immediately and encodes on a
+background thread; these tests gate the encode on an event so every race
+the serving tier can hit is reproduced deterministically: get-before-ready,
+evict-while-encoding, update-while-encoding, duplicate submits, failures,
+and the SpMVService integration (submit/flush against a not-yet-ready
+matrix without stalling the dispatcher).
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import format as F
+from repro.core import registry as R
+from repro.serve.spmv_service import SpMVService
+
+CFG = F.SerpensConfig(segment_width=64, lanes=8, sublanes=4, raw_window=4)
+
+
+def coo(m, k, nnz, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, m, nnz), rng.integers(0, k, nnz),
+            rng.normal(size=nnz).astype(np.float32))
+
+
+def dense_of(rows, cols, vals, shape):
+    out = np.zeros(shape, np.float32)
+    np.add.at(out, (rows, cols), vals)
+    return out
+
+
+@pytest.fixture
+def gated(monkeypatch):
+    """Gate every encode on an event; returns (release, calls) where
+    ``calls`` counts encode invocations."""
+    gate = threading.Event()
+    calls = {"n": 0}
+    orig = R.penc.prepare_and_plan
+
+    def waiting(*args, **kwargs):
+        calls["n"] += 1
+        assert gate.wait(30), "test forgot to release the encode gate"
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(R.penc, "prepare_and_plan", waiting)
+    yield gate.set, calls
+    gate.set()                       # never leave a job stuck past the test
+
+
+def drain(reg, timeout=30.0):
+    """Wait until no background encode is pending."""
+    deadline = time.perf_counter() + timeout
+    while reg.pending_encodes:
+        assert time.perf_counter() < deadline, "background encode stuck"
+        time.sleep(0.002)
+
+
+def test_nonblocking_put_returns_immediately_and_serves(gated):
+    release, calls = gated
+    reg = R.MatrixRegistry(config=CFG)
+    r, c, v = coo(40, 60, 300, seed=1)
+    t0 = time.perf_counter()
+    mid = reg.put(r, c, v, (40, 60), blocking=False)
+    assert time.perf_counter() - t0 < 5.0    # did not wait for the encode
+    assert not reg.ready(mid)
+    assert reg.shape(mid) == (40, 60)
+    assert reg.pending_encodes == 1
+    release()
+    op = reg.get(mid)                        # blocks until installed
+    assert reg.ready(mid)
+    x = np.random.default_rng(2).normal(size=60).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(op.matvec(x)),
+                               dense_of(r, c, v, (40, 60)) @ x,
+                               rtol=1e-4, atol=1e-4)
+    snap = reg.stats_snapshot()
+    assert snap.background_puts == 1
+    assert snap.queue_seconds >= 0.0
+    assert reg.encode_stats()[mid]["queue_seconds"] >= 0.0
+
+
+def test_get_before_ready_blocks_and_times_out(gated):
+    release, _ = gated
+    reg = R.MatrixRegistry(config=CFG)
+    r, c, v = coo(32, 48, 200, seed=3)
+    mid = reg.put(r, c, v, (32, 48), blocking=False)
+    with pytest.raises(KeyError, match="still encoding"):
+        reg.get(mid, block=False)
+    with pytest.raises(TimeoutError):
+        reg.get(mid, timeout=0.05)
+    release()
+    assert reg.get(mid).shape == (32, 48)
+    drain(reg)
+
+
+def test_evict_while_encoding_discards_the_install(gated):
+    release, _ = gated
+    reg = R.MatrixRegistry(config=CFG)
+    r, c, v = coo(32, 48, 200, seed=4)
+    mid = reg.put(r, c, v, (32, 48), blocking=False)
+    reg.evict(mid)                           # cancel before the job lands
+    release()
+    time.sleep(0.05)
+    deadline = time.perf_counter() + 30
+    while reg.stats_snapshot().encodes == 0:  # job still finishes its work
+        assert time.perf_counter() < deadline
+        time.sleep(0.002)
+    assert len(reg) == 0                     # ... but never installs
+    with pytest.raises(KeyError):
+        reg.get(mid, block=False)
+    with pytest.raises(KeyError):
+        reg.ready(mid)
+
+
+def test_update_while_encoding_waits_then_applies(gated):
+    release, _ = gated
+    reg = R.MatrixRegistry(config=CFG)
+    r, c, v = coo(32, 48, 200, seed=5)
+    mid = reg.put(r, c, v, (32, 48), blocking=False)
+    done = {}
+
+    def do_update():
+        done["id"] = reg.update(mid, [1], [2], [3.5])
+
+    t = threading.Thread(target=do_update)
+    t.start()
+    time.sleep(0.05)
+    assert t.is_alive()                      # update is waiting on the put
+    release()
+    t.join(timeout=30)
+    assert not t.is_alive() and done["id"] == mid
+    assert reg.version(mid) == 1
+    want = dense_of(r, c, v, (32, 48))
+    want[1, 2] += 3.5
+    np.testing.assert_allclose(reg.get(mid).to_dense(), want,
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_duplicate_nonblocking_put_encodes_once(gated):
+    release, calls = gated
+    reg = R.MatrixRegistry(config=CFG)
+    r, c, v = coo(32, 48, 200, seed=6)
+    mid1 = reg.put(r, c, v, (32, 48), blocking=False)
+    mid2 = reg.put(r, c, v, (32, 48), blocking=False)
+    assert mid1 == mid2
+    assert reg.pending_encodes == 1
+    release()
+    reg.get(mid1)
+    drain(reg)
+    assert calls["n"] == 1
+
+
+def test_blocking_put_waits_for_queued_twin(gated):
+    release, calls = gated
+    reg = R.MatrixRegistry(config=CFG)
+    r, c, v = coo(32, 48, 200, seed=7)
+    mid = reg.put(r, c, v, (32, 48), blocking=False)
+    got = {}
+
+    def blocking_put():
+        got["id"] = reg.put(r, c, v, (32, 48))
+
+    t = threading.Thread(target=blocking_put)
+    t.start()
+    time.sleep(0.05)
+    assert t.is_alive()                      # waiting on the queued encode
+    release()
+    t.join(timeout=30)
+    assert got["id"] == mid
+    assert calls["n"] == 1                   # one encode served both puts
+    assert reg.stats_snapshot().encodes == 1
+
+
+def test_no_gap_between_pending_and_installed(monkeypatch):
+    """Regression: the job used to clear the pending record before
+    installing the entry, so ready()/get() racing the completion saw
+    neither and raised 'not in registry' for a put that was succeeding."""
+    reg = R.MatrixRegistry(config=CFG)
+    installed = threading.Event()
+    resume = threading.Event()
+    orig = reg._install
+
+    def slow_install(*args, **kwargs):
+        out = orig(*args, **kwargs)
+        installed.set()
+        assert resume.wait(30)
+        return out
+
+    monkeypatch.setattr(reg, "_install", slow_install)
+    r, c, v = coo(32, 48, 200, seed=20)
+    mid = reg.put(r, c, v, (32, 48), blocking=False)
+    assert installed.wait(30)
+    # Entry installed, pending not yet cleared: must read as still
+    # pending — never as an unknown matrix.
+    assert reg.ready(mid) is False
+    resume.set()
+    deadline = time.perf_counter() + 30
+    while not reg.ready(mid):
+        assert time.perf_counter() < deadline
+        time.sleep(0.002)
+    assert reg.get(mid).shape == (32, 48)
+
+
+def test_blocking_put_over_cancelled_twin_still_installs(gated):
+    """A blocking put waiting on a queued twin must encode itself if the
+    twin is evicted mid-encode — it promises a cached entry."""
+    release, calls = gated
+    reg = R.MatrixRegistry(config=CFG)
+    r, c, v = coo(32, 48, 200, seed=21)
+    mid = reg.put(r, c, v, (32, 48), blocking=False)
+    got = {}
+
+    def blocking_put():
+        got["id"] = reg.put(r, c, v, (32, 48))
+
+    t = threading.Thread(target=blocking_put)
+    t.start()
+    time.sleep(0.05)
+    reg.evict(mid)                           # cancel the queued twin
+    release()
+    t.join(timeout=30)
+    assert got["id"] == mid
+    assert calls["n"] == 2                   # the waiter re-encoded
+    assert mid in reg
+    assert reg.get(mid).shape == (32, 48)
+
+
+def test_close_after_background_put_tears_down_the_pool():
+    """close() must drain the executor before capturing the pool — an
+    in-flight encode may lazily (re)create it."""
+    reg = R.MatrixRegistry(config=CFG, n_workers=2, min_parallel_nnz=0)
+    r, c, v = coo(40, 60, 400, seed=22)
+    mid = reg.put(r, c, v, (40, 60), blocking=False)
+    reg.close()                              # waits for the encode
+    assert reg.ready(mid)                    # install completed
+    assert reg._pool is None and reg._executor is None
+
+
+def test_background_encode_failure_surfaces(monkeypatch):
+    def boom(*a, **kw):
+        raise RuntimeError("encode exploded")
+
+    monkeypatch.setattr(R.penc, "prepare_and_plan", boom)
+    reg = R.MatrixRegistry(config=CFG)
+    r, c, v = coo(32, 48, 200, seed=8)
+    mid = reg.put(r, c, v, (32, 48), blocking=False)
+    deadline = time.perf_counter() + 30
+    while True:
+        try:
+            ready = reg.ready(mid)
+        except RuntimeError as e:
+            assert "failed" in str(e)
+            break
+        assert not ready
+        assert time.perf_counter() < deadline
+        time.sleep(0.002)
+    with pytest.raises(RuntimeError, match="failed"):
+        reg.get(mid)
+
+
+def test_submitted_buffers_are_copied(gated):
+    """Mutating the caller's triples after put(blocking=False) must not
+    corrupt the encode."""
+    release, _ = gated
+    reg = R.MatrixRegistry(config=CFG)
+    r, c, v = coo(32, 48, 200, seed=9)
+    want = dense_of(r, c, v, (32, 48))
+    mid = reg.put(r, c, v, (32, 48), blocking=False)
+    v[:] = 0.0                               # caller reuses its buffer
+    release()
+    np.testing.assert_allclose(reg.get(mid).to_dense(), want,
+                               rtol=1e-6, atol=1e-6)
+
+
+class TestServiceAgainstPendingMatrices:
+    def test_submit_and_flush_never_stall(self, gated):
+        release, _ = gated
+        reg = R.MatrixRegistry(config=CFG)
+        r, c, v = coo(40, 60, 300, seed=10)
+        dense = dense_of(r, c, v, (40, 60))
+        mid = reg.put(r, c, v, (40, 60), blocking=False)
+        svc = SpMVService(reg, max_bucket=4)
+        rng = np.random.default_rng(11)
+        xs = rng.normal(size=(3, 60)).astype(np.float32)
+        t0 = time.perf_counter()
+        tickets = [svc.submit(mid, x) for x in xs]   # no stall
+        first = svc.flush()                          # dispatches nothing
+        assert time.perf_counter() - t0 < 5.0
+        assert first == {}
+        assert svc.pending == 3                      # deferred, not lost
+        assert svc.stats.deferred == 3
+        release()
+        reg.get(mid)                                 # wait for install
+        results = svc.flush()
+        for t, x in zip(tickets, xs):
+            np.testing.assert_allclose(results[t].y, dense @ x,
+                                       rtol=1e-4, atol=1e-4)
+
+    def test_submit_validates_against_pending_shape(self, gated):
+        release, _ = gated
+        reg = R.MatrixRegistry(config=CFG)
+        r, c, v = coo(40, 60, 300, seed=12)
+        mid = reg.put(r, c, v, (40, 60), blocking=False)
+        svc = SpMVService(reg, max_bucket=4)
+        with pytest.raises(ValueError, match="length-60"):
+            svc.submit(mid, np.zeros(13, np.float32))
+        release()
+        reg.get(mid)
+
+    def test_serve_spans_the_encode(self, gated):
+        """serve() keeps re-flushing while the matrix encodes in the
+        background and returns once it lands."""
+        release, _ = gated
+        reg = R.MatrixRegistry(config=CFG)
+        r, c, v = coo(40, 60, 300, seed=13)
+        dense = dense_of(r, c, v, (40, 60))
+        mid = reg.put(r, c, v, (40, 60), blocking=False)
+        svc = SpMVService(reg, max_bucket=4)
+        rng = np.random.default_rng(14)
+        xs = rng.normal(size=(2, 60)).astype(np.float32)
+        threading.Timer(0.2, release).start()
+        ys = svc.serve([(mid, x) for x in xs], timeout=30)
+        for y, x in zip(ys, xs):
+            np.testing.assert_allclose(y, dense @ x, rtol=1e-4,
+                                       atol=1e-4)
+
+    def test_replaced_content_fails_deferred_ticket_explicitly(self,
+                                                               gated):
+        """Regression: a deferred request (submitted while its matrix was
+        encoding) must NOT be silently served against different content
+        re-registered under the same id — it pins the content hash at
+        submit and fails explicitly."""
+        release, _ = gated
+        reg = R.MatrixRegistry(config=CFG)
+        r, c, v = coo(40, 60, 300, seed=16)
+        mid = reg.put(r, c, v, (40, 60), matrix_id="m", blocking=False)
+        svc = SpMVService(reg, max_bucket=4)
+        ticket = svc.submit(mid, np.ones(60, np.float32))
+        release()
+        reg.get(mid)
+        # Same id, same shape, different data — the stale ticket must not
+        # be served against it.
+        reg.put(r, c, v * 2.0, (40, 60), matrix_id="m")
+        svc.flush()
+        with pytest.raises(RuntimeError, match="replaced or updated"):
+            svc.result(ticket, timeout=5.0)
+        # New submits against the new content serve fine.
+        x = np.random.default_rng(0).normal(size=60).astype(np.float32)
+        dense2 = dense_of(r, c, v * 2.0, (40, 60))
+        np.testing.assert_allclose(
+            svc.serve([(mid, x)], timeout=30)[0], dense2 @ x,
+            rtol=1e-4, atol=1e-4)
+
+    def test_reshaped_matrix_fails_ticket_without_poisoning_flush(
+            self, gated):
+        """Regression: a deferred request validated against the pending
+        shape used to blow up _dispatch after the id was re-registered
+        with a different K — and flush's rollback re-queued it forever,
+        starving every other request."""
+        release, _ = gated
+        reg = R.MatrixRegistry(config=CFG)
+        r, c, v = coo(40, 60, 300, seed=17)
+        mid = reg.put(r, c, v, (40, 60), matrix_id="b", blocking=False)
+        svc = SpMVService(reg, max_bucket=4)
+        stale = svc.submit(mid, np.ones(60, np.float32))
+        release()
+        reg.get(mid)
+        r2, c2, v2 = coo(40, 100, 300, seed=18)
+        reg.put(r2, c2, v2, (40, 100), matrix_id="b")   # new K=100
+        dense2 = dense_of(r2, c2, v2, (40, 100))
+        x = np.random.default_rng(1).normal(size=100).astype(np.float32)
+        good = svc.submit(mid, x)
+        svc.flush()                                     # must not raise
+        with pytest.raises(RuntimeError):
+            svc.result(stale, timeout=5.0)
+        res = svc.result(good, timeout=5.0)             # innocent served
+        np.testing.assert_allclose(res.y, dense2 @ x, rtol=1e-4,
+                                   atol=1e-4)
+        assert svc.pending == 0                         # nothing stuck
+
+    def test_evicted_mid_encode_request_errors_not_hangs(self, gated):
+        release, _ = gated
+        reg = R.MatrixRegistry(config=CFG)
+        r, c, v = coo(40, 60, 300, seed=15)
+        mid = reg.put(r, c, v, (40, 60), blocking=False)
+        svc = SpMVService(reg, max_bucket=4)
+        ticket = svc.submit(mid, np.zeros(60, np.float32))
+        reg.evict(mid)
+        release()
+        drain(reg)
+        svc.flush()
+        with pytest.raises(KeyError):
+            svc.result(ticket, timeout=5.0)

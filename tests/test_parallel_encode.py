@@ -1,0 +1,237 @@
+"""Parallel multi-process encode: bit-identity with the serial pipeline.
+
+The contract is exact: for every partition spec, spill/lane-balance config
+and worker count, the parallel encode must produce byte-identical streams
+(and, where applicable, a byte-identical ``PreparedCOO``) to the serial
+path.  ``tests/test_parallel_encode_properties.py`` property-tests the same
+contract under hypothesis; this file pins deterministic cases, the pool
+lifecycle, and the registry/partition integration layers.
+"""
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import format as F
+from repro.core import parallel_encode as PE
+from repro.core import partition as P
+from repro.core import registry as R
+
+CFG = F.SerpensConfig(segment_width=32, lanes=4, sublanes=4, raw_window=4)
+SPILL_CFG = F.SerpensConfig(segment_width=32, lanes=4, sublanes=4,
+                            raw_window=2, spill_hot_rows=True,
+                            lane_balance=1.2)
+ODD_CFG = F.SerpensConfig(segment_width=48, lanes=6, sublanes=3,
+                          raw_window=4)
+CHUNK_CFG = F.SerpensConfig(segment_width=64, lanes=8, sublanes=2,
+                            raw_window=6, tiles_per_chunk=2)
+CONFIGS = [CFG, SPILL_CFG, ODD_CFG, CHUNK_CFG]
+SPECS = [("single", 1), ("row", 2), ("row", 3), ("col", 2), ("col", 3)]
+
+
+def rand_coo(m, k, nnz, seed):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, m, nnz), rng.integers(0, k, nnz),
+            rng.normal(size=nnz).astype(np.float32))
+
+
+def assert_plans_identical(a, b):
+    for name in ("idx", "val", "seg_ids", "aux_rows", "aux_cols",
+                 "aux_vals"):
+        assert np.array_equal(getattr(a, name), getattr(b, name)), name
+    assert a.shape == b.shape
+    assert a.block_m == b.block_m and a.block_k == b.block_k
+    assert a.num_segments_local == b.num_segments_local
+    for sa, sb in zip(a.shards, b.shards):
+        assert sa.nnz == sb.nnz
+        assert sa.num_segments == sb.num_segments
+
+
+@pytest.fixture(scope="module")
+def pool():
+    # jax is loaded in the test process, so the pool must spawn; workers
+    # import only numpy + repro.core.format.
+    with PE.EncodePool(2, "spawn") as p:
+        yield p
+
+
+class TestEncodePool:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="n_workers"):
+            PE.EncodePool(0)
+
+    def test_start_method_avoids_fork_under_jax(self):
+        # jax is imported by this test suite, so fork must not be chosen.
+        assert PE.default_start_method() == "spawn"
+        assert PE.EncodePool(2).start_method == "spawn"
+
+    def test_close_is_idempotent(self):
+        p = PE.EncodePool(2, "spawn")
+        p.close()
+        p.close()
+
+
+class TestBitIdentity:
+    @pytest.mark.parametrize("cfg", CONFIGS, ids=lambda c: (
+        f"w{c.segment_width}l{c.lanes}"
+        f"{'s' if c.spill_hot_rows else ''}"
+        f"{'b' if c.lane_balance else ''}"))
+    @pytest.mark.parametrize("part,ns", SPECS)
+    def test_matches_serial(self, pool, cfg, part, ns):
+        rows, cols, vals = rand_coo(57, 85, 500, seed=ns * 7 + 1)
+        spec = P.PlanSpec(part, ns)
+        prep = F.prepare(rows, cols, vals, (57, 85), cfg)
+        serial = P.plan_from_prepared(prep, spec)
+        for nw in (2, 3):
+            pp, plan = PE.prepare_and_plan(rows, cols, vals, (57, 85),
+                                           cfg, spec, n_workers=nw,
+                                           pool=pool, want_prepared=True)
+            assert_plans_identical(serial, plan)
+            assert np.array_equal(pp.order, prep.order)
+            assert np.array_equal(pp.bucket_key, prep.bucket_key)
+            assert np.array_equal(pp.packed, prep.packed)
+            plan2 = PE.plan_from_prepared_parallel(prep, spec,
+                                                   n_workers=nw,
+                                                   pool=pool)
+            assert_plans_identical(serial, plan2)
+
+    def test_encode_parallel_matches_encode(self, pool):
+        rows, cols, vals = rand_coo(40, 70, 400, seed=3)
+        sm_s = F.encode(rows, cols, vals, (40, 70), SPILL_CFG)
+        sm_p = PE.encode_parallel(rows, cols, vals, (40, 70), SPILL_CFG,
+                                  n_workers=2, pool=pool)
+        for name in ("idx", "val", "seg_ids", "aux_rows", "aux_cols",
+                     "aux_vals"):
+            assert np.array_equal(getattr(sm_s, name),
+                                  getattr(sm_p, name)), name
+        F.check_invariants(sm_p)
+
+    def test_prepare_parallel_matches_prepare(self, pool):
+        rows, cols, vals = rand_coo(64, 96, 700, seed=5)
+        serial = F.prepare(rows, cols, vals, (64, 96), CFG)
+        par = PE.prepare_parallel(rows, cols, vals, (64, 96), CFG,
+                                  n_workers=2, pool=pool)
+        assert np.array_equal(par.order, serial.order)
+        assert np.array_equal(par.bucket_key, serial.bucket_key)
+        assert np.array_equal(par.packed, serial.packed)
+        assert np.array_equal(par.rows, serial.rows)
+        assert par.rows.dtype == serial.rows.dtype
+
+    def test_more_workers_than_segments(self, pool):
+        # One segment: the whole encode collapses to a single range/task.
+        rows, cols, vals = rand_coo(16, 20, 60, seed=6)
+        sm_s = F.encode(rows, cols, vals, (16, 20), CFG)
+        sm_p = PE.encode_parallel(rows, cols, vals, (16, 20), CFG,
+                                  n_workers=8, pool=pool)
+        assert np.array_equal(sm_s.idx, sm_p.idx)
+
+    def test_tiny_and_empty_inputs(self, pool):
+        sm = PE.encode_parallel([], [], [], (8, 8), CFG, n_workers=2,
+                                pool=pool)
+        assert sm.nnz == 0 and sm.idx.shape[0] == CFG.tiles_per_chunk
+        sm_s = F.encode([3], [4], [1.5], (8, 8), CFG)
+        sm_p = PE.encode_parallel([3], [4], [1.5], (8, 8), CFG,
+                                  n_workers=4, pool=pool)
+        assert np.array_equal(sm_s.idx, sm_p.idx)
+        assert np.array_equal(sm_s.val, sm_p.val)
+
+    def test_duplicate_entries_survive(self, pool):
+        # Duplicates are legal COO; they must stay separate stream slots.
+        rows = np.array([1, 1, 1, 5, 5])
+        cols = np.array([2, 2, 2, 9, 9])
+        vals = np.array([1.0, 2.0, 3.0, 4.0, 5.0], np.float32)
+        sm_s = F.encode(rows, cols, vals, (8, 16), CFG)
+        sm_p = PE.encode_parallel(rows, cols, vals, (8, 16), CFG,
+                                  n_workers=2, pool=pool)
+        assert np.array_equal(sm_s.idx, sm_p.idx)
+        assert np.array_equal(sm_s.val, sm_p.val)
+
+
+class TestPartitionThreading:
+    def test_make_plan_n_workers(self, pool):
+        rows, cols, vals = rand_coo(48, 90, 600, seed=8)
+        spec = P.PlanSpec("row", 2)
+        serial = P.make_plan(rows, cols, vals, (48, 90), CFG, spec)
+        par = P.make_plan(rows, cols, vals, (48, 90), CFG, spec,
+                          n_workers=2, pool=pool)
+        assert_plans_identical(serial, par)
+
+    def test_plan_from_prepared_n_workers(self, pool):
+        rows, cols, vals = rand_coo(48, 90, 600, seed=9)
+        prep = F.prepare(rows, cols, vals, (48, 90), ODD_CFG)
+        spec = P.PlanSpec("col", 3)
+        serial = P.plan_from_prepared(prep, spec)
+        par = P.plan_from_prepared(prep, spec, n_workers=2, pool=pool)
+        assert_plans_identical(serial, par)
+
+    def test_n_workers_one_is_serial(self):
+        rows, cols, vals = rand_coo(32, 50, 200, seed=10)
+        serial = P.make_plan(rows, cols, vals, (32, 50), CFG)
+        same = P.make_plan(rows, cols, vals, (32, 50), CFG, n_workers=1)
+        assert_plans_identical(serial, same)
+
+
+class TestRegistryIntegration:
+    def test_parallel_registry_matches_serial(self, pool):
+        """A parallel-encode registry must produce the same content ids
+        and byte-identical streams as a serial one."""
+        rows, cols, vals = rand_coo(56, 72, 800, seed=11)
+        reg_s = R.MatrixRegistry(config=CFG)
+        reg_p = R.MatrixRegistry(config=CFG, n_workers=2,
+                                 encode_pool=pool, min_parallel_nnz=0)
+        mid_s = reg_s.put(rows, cols, vals, (56, 72))
+        mid_p = reg_p.put(rows, cols, vals, (56, 72))
+        assert mid_s == mid_p
+        assert_plans_identical(reg_s.get(mid_s).plan,
+                               reg_p.get(mid_p).plan)
+
+    def test_small_matrices_skip_the_pool(self):
+        """Below min_parallel_nnz the registry encodes in-process (no pool
+        is ever created)."""
+        reg = R.MatrixRegistry(config=CFG, n_workers=2,
+                               min_parallel_nnz=10**9)
+        rows, cols, vals = rand_coo(32, 48, 300, seed=12)
+        mid = reg.put(rows, cols, vals, (32, 48))
+        assert mid in reg
+        assert reg._pool is None
+
+
+FORK_COW_SCRIPT = r"""
+import sys
+import numpy as np
+from repro.core import format as F
+from repro.core import parallel_encode as PE
+from repro.core import partition as P
+
+assert "jax" not in sys.modules
+assert PE.default_start_method() == "fork", PE.default_start_method()
+rng = np.random.default_rng(0)
+m, k, nnz = 60, 90, 2000
+rows = rng.integers(0, m, nnz)
+cols = rng.integers(0, k, nnz)
+vals = rng.normal(size=nnz).astype(np.float32)
+cfg = F.SerpensConfig(segment_width=32, lanes=4, sublanes=4, raw_window=2,
+                      spill_hot_rows=True, lane_balance=1.2)
+for part, ns in (("single", 1), ("row", 2), ("col", 2)):
+    spec = P.PlanSpec(part, ns)
+    serial = P.make_plan(rows, cols, vals, (m, k), cfg, spec)
+    par = P.make_plan(rows, cols, vals, (m, k), cfg, spec, n_workers=2)
+    for name in ("idx", "val", "seg_ids", "aux_rows", "aux_vals"):
+        assert np.array_equal(getattr(serial, name), getattr(par, name)), \
+            (part, ns, name)
+assert "jax" not in sys.modules
+print("FORK-COW-OK")
+"""
+
+
+def test_fork_cow_path_in_jax_free_process():
+    """The benchmark path: with no jax in the process, parallel encode
+    forks an ephemeral pool and shares arrays copy-on-write."""
+    proc = subprocess.run(
+        [sys.executable, "-c", FORK_COW_SCRIPT],
+        capture_output=True, text=True, timeout=300,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+             "JAX_PLATFORMS": "cpu"})
+    assert proc.returncode == 0, proc.stderr
+    assert "FORK-COW-OK" in proc.stdout

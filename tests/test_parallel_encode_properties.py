@@ -1,0 +1,87 @@
+"""Hypothesis property tests for the parallel encode (optional dependency).
+
+The property is exact bit-identity: for any COO input, geometry, partition
+spec and worker count, ``parallel(n_workers=k) == serial`` — the same
+stacked stream arrays, the same aux spill triples, and (for the cold path)
+the same ``PreparedCOO`` bucket sort.  Covers the spill and lane-balance
+paths, whose selections depend on input-order ranks — exactly what a
+careless sharding would break.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import format as F  # noqa: E402
+from repro.core import parallel_encode as PE  # noqa: E402
+from repro.core import partition as P  # noqa: E402
+from test_format import rand_coo  # noqa: E402
+from test_parallel_encode import assert_plans_identical  # noqa: E402
+
+
+CONFIGS = st.sampled_from([
+    F.SerpensConfig(segment_width=32, lanes=4, sublanes=4, raw_window=4),
+    F.SerpensConfig(segment_width=32, lanes=4, sublanes=4, raw_window=1),
+    # Spill + lane-balance paths (the OPTIMIZED_CONFIG mechanisms) — their
+    # keep-sets rank entries by input order within each bucket:
+    F.SerpensConfig(segment_width=32, lanes=4, sublanes=4, raw_window=2,
+                    spill_hot_rows=True, lane_balance=1.2),
+    F.SerpensConfig(segment_width=32, lanes=4, sublanes=2, raw_window=3,
+                    spill_hot_rows=True),
+    F.SerpensConfig(segment_width=16, lanes=2, sublanes=2, raw_window=5,
+                    lane_balance=1.05),
+    # Non-power-of-two geometry + multi-tile chunks:
+    F.SerpensConfig(segment_width=48, lanes=6, sublanes=3, raw_window=4),
+    F.SerpensConfig(segment_width=64, lanes=8, sublanes=2, raw_window=6,
+                    tiles_per_chunk=2),
+])
+
+SPECS = st.sampled_from([("single", 1), ("row", 2), ("row", 3),
+                         ("col", 2), ("col", 3)])
+
+
+@pytest.fixture(scope="module")
+def pool():
+    with PE.EncodePool(2, "spawn") as p:
+        yield p
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(4, 120), st.integers(4, 150), st.integers(1, 400),
+       st.integers(0, 10_000), CONFIGS, SPECS, st.integers(2, 4))
+def test_property_parallel_plan_bit_identical(pool, m, k, nnz, seed, cfg,
+                                              spec_args, nw):
+    rows, cols, vals = rand_coo(m, k, nnz, seed, dupes=True)
+    spec = P.PlanSpec(*spec_args)
+    prep = F.prepare(rows, cols, vals, (m, k), cfg)
+    serial = P.plan_from_prepared(prep, spec)
+    # Cold path: workers sort + encode their own ranges.
+    pp, plan = PE.prepare_and_plan(rows, cols, vals, (m, k), cfg, spec,
+                                   n_workers=nw, pool=pool,
+                                   want_prepared=True)
+    assert_plans_identical(serial, plan)
+    assert np.array_equal(pp.order, prep.order)
+    # Warm path: the prepared sort is reused (where the config allows).
+    plan2 = PE.plan_from_prepared_parallel(prep, spec, n_workers=nw,
+                                           pool=pool)
+    assert_plans_identical(serial, plan2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 100), st.integers(1, 120), st.integers(0, 300),
+       st.integers(0, 10_000), st.integers(2, 4))
+def test_property_prepare_parallel_bit_identical(pool, m, k, nnz, seed,
+                                                 nw):
+    rows, cols, vals = rand_coo(m, k, max(nnz, 1), seed, dupes=True)
+    cfg = F.SerpensConfig(segment_width=32, lanes=4, sublanes=4,
+                          raw_window=4)
+    serial = F.prepare(rows, cols, vals, (m, k), cfg)
+    par = PE.prepare_parallel(rows, cols, vals, (m, k), cfg,
+                              n_workers=nw, pool=pool)
+    assert np.array_equal(par.order, serial.order)
+    assert np.array_equal(par.bucket_key, serial.bucket_key)
+    if serial.packed is None:
+        assert par.packed is None
+    else:
+        assert np.array_equal(par.packed, serial.packed)

@@ -208,12 +208,18 @@ class TestRegistryPlans:
         rows, cols, vals, dense = coo(40, 56, 400, seed=15)
         reg = MatrixRegistry(config=PAPER_CFG, backend="xla")
         mid = reg.put(rows, cols, vals, (40, 56))      # single-shard plan
-        bytes_before = reg.bytes_in_use
+        stream_before = reg.stream_bytes_in_use
+        prepared_before = reg.prepared_bytes_in_use
+        device_before = reg.device_bytes_in_use
         mesh = compat.make_mesh((1,), ("c",))
         op = reg.get(mid, mesh=mesh, axis="c", partition="col")
         assert op.plan.num_shards == 1
         assert reg.stats.encodes == 1                  # no repartition
-        assert reg.bytes_in_use == bytes_before        # plan reused
+        # Plan reused (no new host bytes); only the new mesh binding's
+        # device buffers are charged.
+        assert reg.stream_bytes_in_use == stream_before
+        assert reg.prepared_bytes_in_use == prepared_before
+        assert reg.device_bytes_in_use == device_before + op.device_bytes
         assert reg.get(mid, mesh=mesh, axis="c", partition="col") is op
         x = np.random.default_rng(16).normal(size=56).astype(np.float32)
         np.testing.assert_allclose(np.asarray(op.matvec(x)), dense @ x,

@@ -140,15 +140,25 @@ class TestCaching:
         assert reg.stats.hits == 1
 
 
+def lru_budget(seed=7):
+    """A budget that holds exactly two entries once degraded.
+
+    ``2*stream + device + stream//2``: after the pressure stages shed
+    bindings and prepared arrays, three entries floor out at
+    ``3*stream + device`` (> budget) while two sit at ``2*stream +
+    device`` (≤ budget) — deterministic for any stream/prepared/device
+    byte split.
+    """
+    probe = R.MatrixRegistry(config=CFG)
+    r, c, v = coo(40, 60, 300, seed=seed)
+    stream = probe.get(probe.put(r, c, v, (40, 60))).stream_bytes
+    device = probe.device_bytes_in_use
+    return 2 * stream + device + stream // 2
+
+
 class TestLRU:
-    def test_eviction_by_stream_bytes(self):
-        reg = R.MatrixRegistry(config=CFG)
-        r, c, v = coo(40, 60, 300, seed=7)
-        mid = reg.put(r, c, v, (40, 60))
-        per_entry = reg.get(mid).stream_bytes
-        # budget for exactly two entries
-        reg2 = R.MatrixRegistry(byte_budget=2 * per_entry + per_entry // 2,
-                                config=CFG)
+    def test_eviction_by_total_bytes(self):
+        reg2 = R.MatrixRegistry(byte_budget=lru_budget(), config=CFG)
         mids = []
         for seed in (7, 8, 9):
             r, c, v = coo(40, 60, 300, seed=seed)
@@ -161,10 +171,7 @@ class TestLRU:
 
     def test_recency_refresh_protects_entry(self):
         r0, c0, v0 = coo(40, 60, 300, seed=10)
-        probe = R.MatrixRegistry(config=CFG)
-        per_entry = probe.get(probe.put(r0, c0, v0, (40, 60))).stream_bytes
-        reg = R.MatrixRegistry(byte_budget=2 * per_entry + per_entry // 2,
-                               config=CFG)
+        reg = R.MatrixRegistry(byte_budget=lru_budget(seed=10), config=CFG)
         a = reg.put(r0, c0, v0, (40, 60))
         r1, c1, v1 = coo(40, 60, 300, seed=11)
         b = reg.put(r1, c1, v1, (40, 60))
@@ -183,34 +190,45 @@ class TestLRU:
         reg = R.MatrixRegistry(config=CFG)
         r, c, v = coo(30, 40, 100, seed=14)
         mid = reg.put(r, c, v, (30, 40))
-        # The budget charges encoded streams AND the resident PreparedCOO.
+        # The budget charges encoded streams, the resident PreparedCOO AND
+        # the device buffers of cached operator bindings.
         assert reg.stream_bytes_in_use == reg.get(mid).stream_bytes
         assert reg.prepared_bytes_in_use > 0
+        assert reg.device_bytes_in_use == reg.get(mid).device_bytes > 0
         assert reg.bytes_in_use == (reg.stream_bytes_in_use
-                                    + reg.prepared_bytes_in_use)
+                                    + reg.prepared_bytes_in_use
+                                    + reg.device_bytes_in_use)
+        assert reg.stats_snapshot().device_bytes_in_use \
+            == reg.device_bytes_in_use
         reg.evict(mid)
         assert reg.bytes_in_use == 0 and len(reg) == 0
         mid = reg.put(r, c, v, (30, 40))
         reg.clear()
         assert reg.bytes_in_use == 0 and len(reg) == 0
 
-    def test_pressure_drops_prepared_before_evicting(self):
-        """Over budget, PreparedCOO arrays go first; entries only after."""
+    def test_pressure_drops_bindings_and_prepared_before_evicting(self):
+        """Over budget, mesh/operator bindings go first (device bytes
+        released), then PreparedCOO arrays; entries only after."""
         probe = R.MatrixRegistry(config=CFG)
         r, c, v = coo(40, 60, 300, seed=18)
         pid = probe.put(r, c, v, (40, 60))
         stream = probe.get(pid).stream_bytes
-        assert probe.prepared_bytes_in_use > 0
-        # Room for both entries' streams but not for any prepared arrays.
-        reg = R.MatrixRegistry(byte_budget=2 * stream + stream // 2,
-                               config=CFG)
+        device = probe.device_bytes_in_use
+        assert probe.prepared_bytes_in_use > 0 and device > 0
+        # Room for both streams + one binding, but not for any prepared
+        # arrays or a second binding.
+        reg = R.MatrixRegistry(byte_budget=2 * stream + device
+                               + stream // 2, config=CFG)
         a = reg.put(r, c, v, (40, 60))
         r2, c2, v2 = coo(40, 60, 300, seed=19)
         b = reg.put(r2, c2, v2, (40, 60))
         assert a in reg and b in reg              # nothing evicted ...
-        assert reg.stats_snapshot().prepared_drops == 2
-        assert reg.prepared_bytes_in_use == 0     # ... prepared shed instead
-        assert reg.stats_snapshot().evictions == 0
+        snap = reg.stats_snapshot()
+        assert snap.bindings_dropped == 1         # a's binding shed first
+        assert snap.prepared_drops == 2
+        assert reg.prepared_bytes_in_use == 0     # ... state shed instead
+        assert reg.device_bytes_in_use == device  # only b's binding left
+        assert snap.evictions == 0
         assert reg.bytes_in_use <= reg.byte_budget
         # The degraded entry still serves and still repartitions (via the
         # decode path) and still updates (via the full re-encode path).

@@ -1,4 +1,6 @@
 """SpMVService: bucketing correctness vs dense reference + amortization."""
+import threading
+
 import numpy as np
 import pytest
 
@@ -222,6 +224,88 @@ def test_serve_convenience_preserves_order():
     rng = np.random.default_rng(15)
     xs = rng.normal(size=(5, dense.shape[1])).astype(np.float32)
     ys = svc.serve([(mid, x) for x in xs])
+    for y, x in zip(ys, xs):
+        np.testing.assert_allclose(y, dense @ x, atol=1e-4, rtol=1e-4)
+
+
+def test_concurrent_serve_routes_results_to_submitters():
+    """Regression: serve() on one thread flushes ALL pending requests —
+    including tickets submitted concurrently by another thread.  Those
+    results used to die with the flusher's return value; the completed-
+    results store must route every ticket back to its submitter."""
+    reg, mid, dense = make_registry(seed=30)
+    svc = SpMVService(reg, max_bucket=4)
+    barrier = threading.Barrier(2)
+    errors = []
+
+    def worker(seed):
+        try:
+            rng = np.random.default_rng(seed)
+            for _ in range(8):
+                xs = rng.normal(size=(3, dense.shape[1])).astype(
+                    np.float32)
+                barrier.wait(timeout=30)   # submit/flush concurrently
+                ys = svc.serve([(mid, x) for x in xs], timeout=30)
+                for y, x in zip(ys, xs):
+                    np.testing.assert_allclose(y, dense @ x,
+                                               atol=1e-4, rtol=1e-4)
+        except Exception as e:             # noqa: BLE001 — surfaced below
+            errors.append(e)
+            barrier.abort()
+
+    threads = [threading.Thread(target=worker, args=(31 + i,))
+               for i in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert not errors, errors
+    assert svc.pending == 0
+
+
+def test_result_api_collects_across_threads():
+    """result(ticket) must deliver a ticket dispatched by another
+    thread's flush, exactly once."""
+    reg, mid, dense = make_registry(seed=33)
+    svc = SpMVService(reg, max_bucket=4)
+    x = np.random.default_rng(34).normal(
+        size=dense.shape[1]).astype(np.float32)
+    ticket = svc.submit(mid, x)
+    flusher = threading.Timer(0.05, svc.flush)
+    flusher.start()
+    res = svc.result(ticket, timeout=30)   # waits for the other flush
+    np.testing.assert_allclose(res.y, dense @ x, atol=1e-4, rtol=1e-4)
+    flusher.join()
+    with pytest.raises(TimeoutError):      # collectable exactly once
+        svc.result(ticket, timeout=0.01)
+    with pytest.raises(KeyError, match="unknown ticket"):
+        svc.result(10_000, timeout=0.01)
+
+
+def test_result_store_prunes_oldest():
+    reg, mid, dense = make_registry(seed=35)
+    svc = SpMVService(reg, max_bucket=4, max_stored_results=2)
+    rng = np.random.default_rng(36)
+    xs = rng.normal(size=(4, dense.shape[1])).astype(np.float32)
+    tickets = [svc.submit(mid, x) for x in xs]
+    svc.flush()
+    assert svc.stats.results_dropped == 2
+    with pytest.raises(TimeoutError):      # oldest two were pruned
+        svc.result(tickets[0], timeout=0.01)
+    res = svc.result(tickets[3], timeout=1.0)
+    np.testing.assert_allclose(res.y, dense @ xs[3], atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_serve_survives_store_pruning():
+    """Regression: serve() collected only via the bounded store, so a
+    batch wider than max_stored_results hung until TimeoutError even
+    though its own flush had computed every result."""
+    reg, mid, dense = make_registry(seed=37)
+    svc = SpMVService(reg, max_bucket=4, max_stored_results=2)
+    rng = np.random.default_rng(38)
+    xs = rng.normal(size=(5, dense.shape[1])).astype(np.float32)
+    ys = svc.serve([(mid, x) for x in xs], timeout=30)
     for y, x in zip(ys, xs):
         np.testing.assert_allclose(y, dense @ x, atol=1e-4, rtol=1e-4)
 
