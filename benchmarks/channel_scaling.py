@@ -23,7 +23,7 @@ import os
 
 import numpy as np
 
-from benchmarks.common import time_call, emit
+from benchmarks.common import time_call, emit, add_trace_arg, tracing
 from repro.core import format as F
 from repro.core import partition as PT
 from repro.core.spmv import SerpensOperator
@@ -110,9 +110,11 @@ def main():
                     help="where to write the sweep JSON")
     ap.add_argument("--partition", default="row", choices=("row", "col"))
     ap.add_argument("--shards", type=int, nargs="+", default=(1, 2, 4, 8))
+    add_trace_arg(ap)
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(dry_run=args.dry_run, out_path=args.out,
+    with tracing(args.trace_out):
+        run(dry_run=args.dry_run, out_path=args.out,
         shard_counts=tuple(args.shards), partition=args.partition)
 
 

@@ -1,7 +1,10 @@
 """Shared benchmark helpers."""
+import contextlib
 import time
 
 import jax
+
+from repro import obs
 
 
 def time_call(fn, *args, warmup=2, iters=5):
@@ -19,3 +22,56 @@ def time_call(fn, *args, warmup=2, iters=5):
 
 def emit(name, us_per_call, derived):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def add_trace_arg(ap):
+    """Attach the standard ``--trace-out`` flag to an argparse parser."""
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace of this run to "
+                         "PATH (load in ui.perfetto.dev)")
+    return ap
+
+
+@contextlib.contextmanager
+def tracing(path):
+    """Trace the enclosed block to ``path`` (no-op when path is falsy).
+
+    Enables the global tracer for the block, then writes + schema-checks
+    the Chrome trace JSON — every ``--trace-out`` benchmark funnels
+    through here so they all emit the same validated format.
+    """
+    if not path:
+        yield
+        return
+    obs.clear()
+    obs.enable()
+    try:
+        yield
+    finally:
+        obs.disable()
+        obs.write_chrome_trace(path)
+        print(f"# trace written to {path} "
+              f"({obs.TRACER.event_count()} events)")
+
+
+def run_main(run, argv=None, header: bool = False):
+    """Standard bare-``main`` wrapper: ``--trace-out`` (and ``--dry-run``
+    when the entry point takes one).
+
+    ``run`` is the benchmark's entry point; ``--dry-run`` is only offered
+    when its signature accepts a ``dry_run`` keyword, so the fixed-size
+    table/figure benchmarks get the trace flag without a lying option.
+    """
+    import argparse
+    import inspect
+    takes_dry = "dry_run" in inspect.signature(run).parameters
+    ap = argparse.ArgumentParser()
+    if takes_dry:
+        ap.add_argument("--dry-run", action="store_true",
+                        help="shrink the workload (CI smoke)")
+    add_trace_arg(ap)
+    args = ap.parse_args(argv)
+    if header:
+        print("name,us_per_call,derived")
+    with tracing(args.trace_out):
+        run(dry_run=args.dry_run) if takes_dry else run()

@@ -30,10 +30,40 @@ import time
 import numpy as np
 
 # No jax import anywhere in this process: the parallel encode then uses
-# the fork start method and shares input arrays copy-on-write.
+# the fork start method and shares input arrays copy-on-write.  That is
+# also why this file does NOT use benchmarks.common (it imports jax):
+# the trace helpers below are local, jax-free equivalents over repro.obs.
+from repro import obs
 from repro.core import format as F
 from repro.core import partition as P
 from repro.data import matrices as M
+
+
+def add_trace_arg(ap):
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace of this run to "
+                         "PATH (load in ui.perfetto.dev)")
+    return ap
+
+
+class tracing:
+    """jax-free twin of benchmarks.common.tracing (same output format)."""
+
+    def __init__(self, path):
+        self.path = path
+
+    def __enter__(self):
+        if self.path:
+            obs.clear()
+            obs.enable()
+
+    def __exit__(self, *exc):
+        if self.path:
+            obs.disable()
+            obs.write_chrome_trace(self.path)
+            print(f"# trace written to {self.path} "
+                  f"({obs.TRACER.event_count()} events)")
+        return False
 
 DEFAULT_OUT = os.path.join("results", "encode_parallel.json")
 FULL_SIZES = (1_000_000, 10_000_000, 100_000_000)
@@ -153,9 +183,11 @@ def main():
                     help="cap the worker-count sweep (CI uses 2)")
     ap.add_argument("--config", choices=["paper", "optimized"],
                     default=None, help="restrict to one stream config")
+    add_trace_arg(ap)
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(dry_run=args.dry_run, out_path=args.out, sizes=args.sizes,
+    with tracing(args.trace_out):
+        run(dry_run=args.dry_run, out_path=args.out, sizes=args.sizes,
         max_workers=args.max_workers, config_name=args.config)
 
 

@@ -23,7 +23,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, add_trace_arg, tracing
 from repro.core import format as F
 from repro.data import matrices as M
 
@@ -145,9 +145,11 @@ def main():
     ap.add_argument("--sizes", type=int, nargs="+", default=None)
     ap.add_argument("--ref-cap", type=int, default=2_000_000,
                     help="largest nnz at which the heapq reference is timed")
+    add_trace_arg(ap)
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(dry_run=args.dry_run, out_path=args.out, sizes=args.sizes,
+    with tracing(args.trace_out):
+        run(dry_run=args.dry_run, out_path=args.out, sizes=args.sizes,
         ref_cap=args.ref_cap)
 
 

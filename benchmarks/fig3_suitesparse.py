@@ -48,4 +48,5 @@ def run(n_matrices=24, iters=2):
 
 
 if __name__ == "__main__":
-    run()
+    from benchmarks.common import run_main
+    run_main(run)

@@ -109,4 +109,5 @@ def run(write_md=True):
 
 
 if __name__ == "__main__":
-    run()
+    from benchmarks.common import run_main
+    run_main(run)

@@ -2,6 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV (one row per measurement).
 """
+import argparse
 import sys
 import traceback
 
@@ -10,6 +11,10 @@ def main() -> None:
     from benchmarks import (table3_large_matrices, fig3_suitesparse,
                             table5_scaling, table4_resources, roofline,
                             serpens_kernel, serving, channel_scaling)
+    from benchmarks.common import add_trace_arg, tracing
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    add_trace_arg(ap)
+    args = ap.parse_args()
     print("name,us_per_call,derived")
     suites = [
         ("table3", table3_large_matrices.run),
@@ -22,13 +27,14 @@ def main() -> None:
         ("channel_scaling", channel_scaling.run),
     ]
     failures = 0
-    for name, fn in suites:
-        try:
-            fn()
-        except Exception:
-            failures += 1
-            print(f"{name},0.0,ERROR", flush=True)
-            traceback.print_exc(file=sys.stderr)
+    with tracing(args.trace_out):
+        for name, fn in suites:
+            try:
+                fn()
+            except Exception:
+                failures += 1
+                print(f"{name},0.0,ERROR", flush=True)
+                traceback.print_exc(file=sys.stderr)
     if failures:
         sys.exit(1)
 

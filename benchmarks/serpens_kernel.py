@@ -44,4 +44,5 @@ def run(nnz=400_000):
 
 
 if __name__ == "__main__":
-    run()
+    from benchmarks.common import run_main
+    run_main(run)

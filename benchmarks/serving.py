@@ -14,7 +14,7 @@ import argparse
 
 import numpy as np
 
-from benchmarks.common import time_call, emit
+from benchmarks.common import time_call, emit, add_trace_arg, tracing
 from repro.core import format as F
 from repro.core.registry import MatrixRegistry
 from repro.data import matrices as M
@@ -67,6 +67,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--dry-run", action="store_true",
                     help="small matrix + burst (CI smoke)")
+    add_trace_arg(ap)
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(dry_run=args.dry_run)
+    with tracing(args.trace_out):
+        run(dry_run=args.dry_run)

@@ -72,4 +72,5 @@ def run(max_nnz=600_000, iters=3):
 
 
 if __name__ == "__main__":
-    run()
+    from benchmarks.common import run_main
+    run_main(run)

@@ -46,4 +46,5 @@ def run():
 
 
 if __name__ == "__main__":
-    run()
+    from benchmarks.common import run_main
+    run_main(run)

@@ -32,7 +32,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, add_trace_arg, tracing
 from repro.core import format as F
 from repro.core import partition as P
 from repro.data import matrices as M
@@ -170,9 +170,11 @@ def main():
     ap.add_argument("--fractions", type=float, nargs="+", default=None)
     ap.add_argument("--verify-cap", type=int, default=2_000_000,
                     help="largest nnz at which bit-identity is asserted")
+    add_trace_arg(ap)
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(dry_run=args.dry_run, out_path=args.out, sizes=args.sizes,
+    with tracing(args.trace_out):
+        run(dry_run=args.dry_run, out_path=args.out, sizes=args.sizes,
         fractions=args.fractions, verify_cap=args.verify_cap)
 
 

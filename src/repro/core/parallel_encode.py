@@ -48,11 +48,17 @@ from __future__ import annotations
 import multiprocessing as mp
 import sys
 import threading
+import time
 
 import numpy as np
 
 from repro.core import format as sformat
 from repro.core import partition as cpart
+
+# NOTE: this module is imported by spawned worker processes, so it must
+# never import jax — `repro.obs` is safe (pure stdlib) and imported lazily
+# on the parent side only (inside _run_tasks) to keep the worker import
+# footprint minimal.
 
 # Module-global handoff for the fork/copy-on-write path.  Set (under
 # _COW_LOCK) immediately before an ephemeral fork pool starts, so children
@@ -165,12 +171,16 @@ def _encode_range_task(task):
     * ``("arr", rows_loc, cols_loc, vals, shard, bk, pk)`` — the range's
       entries pre-partitioned and shipped by the parent (portable path).
 
-    Returns ``(blocks, order)``: per-shard tile/aux blocks (``None`` for
-    shards with no entries in range; stream arrays ``None`` when every
-    entry spilled) and, when ``want_order``, the entry order — global
-    input indices in the cow path, range-local positions in the args path
-    (the parent maps them through its partition permutation).
+    Returns ``(blocks, order, seconds)``: per-shard tile/aux blocks
+    (``None`` for shards with no entries in range; stream arrays ``None``
+    when every entry spilled); when ``want_order``, the entry order —
+    global input indices in the cow path, range-local positions in the
+    args path (the parent maps them through its partition permutation);
+    and the worker's wall-time for this range, which the parent replays
+    into the trace (perf_counter is not comparable across processes, so
+    only the *duration* ships home).
     """
+    t0 = time.perf_counter()
     (data, n_shards, shape_local, config, is_sorted, want_order,
      sort_only) = task
     if data[0] == "cow":
@@ -203,7 +213,7 @@ def _encode_range_task(task):
     if want_order:
         ret_order = sel[order] if sel is not None else order
     if sort_only:
-        return None, ret_order
+        return None, ret_order, time.perf_counter() - t0
     shard_a = np.zeros(n, np.int64) if shard is None else shard
     mats = sformat._encode_stream(order, shard_a, rows, cols, vals,
                                   n_shards, shape_local, config,
@@ -218,7 +228,7 @@ def _encode_range_task(task):
                        sm.val if kept > 0 else None,
                        sm.seg_ids if kept > 0 else None,
                        sm.aux_rows, sm.aux_cols, sm.aux_vals, sm.nnz))
-    return blocks, ret_order
+    return blocks, ret_order, time.perf_counter() - t0
 
 
 # ---------------------------------------------------------------------------
@@ -287,20 +297,36 @@ def _run_tasks(build_task, bounds, n_workers, pool, cow):
     needs).  ``cow`` — the module-global array dict for the fork path —
     must be ``None`` for the portable pickled-args path.
     """
+    from repro import obs
     tasks = [build_task(i, *bounds[i]) for i in range(len(bounds))]
-    if pool is not None:
-        return pool.map(tasks)
-    if cow is not None:
-        with _COW_LOCK:
-            global _COW
-            _COW = cow
-            try:
-                with mp.get_context("fork").Pool(n_workers) as p:
-                    return p.map(_encode_range_task, tasks, chunksize=1)
-            finally:
-                _COW = {}
-    with EncodePool(n_workers, "spawn") as p:
-        return p.map(tasks)
+    with obs.span("encode-fanout", cat="encode", ranges=len(tasks),
+                  workers=n_workers,
+                  mode=("pool" if pool is not None
+                        else "cow" if cow is not None else "spawn")):
+        if pool is not None:
+            outs = pool.map(tasks)
+        elif cow is not None:
+            with _COW_LOCK:
+                global _COW
+                _COW = cow
+                try:
+                    with mp.get_context("fork").Pool(n_workers) as p:
+                        outs = p.map(_encode_range_task, tasks,
+                                     chunksize=1)
+                finally:
+                    _COW = {}
+        else:
+            with EncodePool(n_workers, "spawn") as p:
+                outs = p.map(tasks)
+        if obs.is_enabled():
+            # Replay each worker's measured wall-time as a trace span:
+            # real duration, end-anchored here (cross-process clocks are
+            # not comparable, so placement is approximate by design).
+            for i, out in enumerate(outs):
+                if out is not None:
+                    obs.event("encode-range", out[2], cat="encode",
+                              range=i)
+    return outs
 
 
 def _parallel_encode(rows, cols, vals, shape, config, spec, *,

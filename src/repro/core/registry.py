@@ -29,6 +29,7 @@ from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
+from repro import obs
 from repro.core import format as sformat
 from repro.core import parallel_encode as penc
 from repro.core import partition as cpart
@@ -356,10 +357,14 @@ class MatrixRegistry:
         t0 = time.perf_counter()
         nw = (self.n_workers
               if np.asarray(rows).size >= self.min_parallel_nnz else 1)
-        prep, plan = penc.prepare_and_plan(
-            rows, cols, vals, shape, cfg, spec, n_workers=nw,
-            pool=self._encode_pool() if nw > 1 else None)
-        op = SerpensOperator(plan, backend=be)
+        with obs.span("encode", cat="registry",
+                      nnz=int(np.asarray(rows).size), workers=nw) as sp:
+            prep, plan = penc.prepare_and_plan(
+                rows, cols, vals, shape, cfg, spec, n_workers=nw,
+                pool=self._encode_pool() if nw > 1 else None)
+            sp.args["slots"] = int(plan.idx.size)
+        with obs.span("bind", cat="registry"):
+            op = SerpensOperator(plan, backend=be)
         dt = time.perf_counter() - t0
         return prep, plan, op, dt, int(plan.idx.size)
 
@@ -442,7 +447,8 @@ class MatrixRegistry:
                         (int(shape[0]), int(shape[1])))
                 self._get_executor().submit(
                     self._background_encode, key, pending, args, cfg,
-                    spec, be)
+                    spec, be, obs.capture_context())
+                obs.instant("encode-queued", cat="registry", matrix=key)
                 return key
         if same_pending:                   # blocking put over a queued twin
             pending.done.wait()
@@ -462,47 +468,56 @@ class MatrixRegistry:
         return self._install(key, ck, spec, be, prep, plan, op, dt, slots)
 
     def _background_encode(self, key, pending: _PendingEncode, args, cfg,
-                           spec, be) -> None:
-        """Executor job for put(blocking=False)."""
+                           spec, be, trace_ctx: dict | None = None) -> None:
+        """Executor job for put(blocking=False).
+
+        ``trace_ctx`` is the submitter's ambient trace context
+        (:func:`obs.capture_context` at put time): adopting it here makes
+        every span this encode emits carry the submitting request's tags,
+        so the background work shows up attributed in the trace.
+        """
         queue_wait = time.perf_counter() - pending.submit_time
-        try:
-            rows, cols, vals, shape = args
-            prep, plan, op, dt, slots = self._encode_plan(
-                rows, cols, vals, shape, cfg, spec, be)
-        except BaseException as e:          # surfaced by ready()/get()
+        with obs.attach_context(trace_ctx or {}, matrix=key):
+            obs.event("encode-queue-wait", queue_wait, cat="registry")
+            try:
+                rows, cols, vals, shape = args
+                prep, plan, op, dt, slots = self._encode_plan(
+                    rows, cols, vals, shape, cfg, spec, be)
+            except BaseException as e:      # surfaced by ready()/get()
+                obs.instant("encode-failed", cat="registry", error=str(e))
+                with self._lock:
+                    pending.error = e
+                pending.done.set()
+                return
             with self._lock:
-                pending.error = e
+                cancelled = pending.cancelled
+                if cancelled:          # evicted mid-encode: count the work
+                    if self._pending.get(key) is pending:
+                        del self._pending[key]
+                    self.stats.encodes += 1
+                    self.stats.encode_seconds += dt
+                    self.stats.encode_slots += slots
+                    self.stats.queue_seconds += queue_wait
+            if not cancelled:
+                # Install BEFORE clearing the pending record: ready()/get()
+                # always see pending-or-entry, never a gap a concurrent
+                # flush would misread as "unknown matrix".
+                self._install(key, pending.content, spec, be, prep, plan,
+                              op, dt, slots, queue_wait=queue_wait)
+                with self._lock:
+                    self.stats.background_puts += 1
+                    if self._pending.get(key) is pending:
+                        del self._pending[key]
+                    if pending.cancelled:
+                        # evict() raced the install (it found no entry to
+                        # remove yet): honor it now.
+                        entry = self._entries.get(key)
+                        if entry is not None \
+                                and entry.content == pending.content:
+                            del self._entries[key]
+                            self._bytes -= entry.total_bytes
+                            self.stats.evictions += 1
             pending.done.set()
-            return
-        with self._lock:
-            cancelled = pending.cancelled
-            if cancelled:              # evicted mid-encode: count the work
-                if self._pending.get(key) is pending:
-                    del self._pending[key]
-                self.stats.encodes += 1
-                self.stats.encode_seconds += dt
-                self.stats.encode_slots += slots
-                self.stats.queue_seconds += queue_wait
-        if not cancelled:
-            # Install BEFORE clearing the pending record: ready()/get()
-            # always see pending-or-entry, never a gap a concurrent
-            # flush would misread as "unknown matrix".
-            self._install(key, pending.content, spec, be, prep, plan, op,
-                          dt, slots, queue_wait=queue_wait)
-            with self._lock:
-                self.stats.background_puts += 1
-                if self._pending.get(key) is pending:
-                    del self._pending[key]
-                if pending.cancelled:
-                    # evict() raced the install (it found no entry to
-                    # remove yet): honor it now.
-                    entry = self._entries.get(key)
-                    if entry is not None \
-                            and entry.content == pending.content:
-                        del self._entries[key]
-                        self._bytes -= entry.total_bytes
-                        self.stats.evictions += 1
-        pending.done.set()
 
     def ready(self, matrix_id: str) -> bool:
         """Poll a background put: True once the entry serves, False while
@@ -626,29 +641,36 @@ class MatrixRegistry:
             new_ck = delta_key(content, mode, d_r, d_c, d_v)
             # Merge + re-encode outside the lock (the slow, pure part).
             t0 = time.perf_counter()
-            if prep is not None:
-                merge = prep.merge_delta(d_r, d_c, d_v, mode=mode)
-                if merge.is_noop:      # nothing changed: keep the version
-                    return matrix_id   # and every cached mesh binding
-                new_prep = merge.prepared
-                new_plans, slots = {}, 0
-                for spec, plan in plans.items():
-                    new_plans[spec], merge, s = cpart.plan_apply_delta(
-                        plan, prep, merge=merge)
-                    slots += s
-            else:
-                # Degraded path: prepared dropped (byte pressure) or never
-                # known (adopted operator) — decode and re-encode cold.
-                src = next(iter(plans.values()))
-                r, c, v = src.to_coo()
-                base = sformat.prepare(r, c, v, src.shape, src.config)
-                merge = base.merge_delta(d_r, d_c, d_v, mode=mode)
-                if merge.is_noop:
-                    return matrix_id
-                new_prep = merge.prepared
-                new_plans = {spec: cpart.plan_from_prepared(new_prep, spec)
-                             for spec in plans}
-                slots = sum(int(p.idx.size) for p in new_plans.values())
+            with obs.span("delta-encode", cat="registry", matrix=matrix_id,
+                          mode=mode, delta_nnz=int(d_r.size),
+                          degraded=prep is None) as dsp:
+                if prep is not None:
+                    merge = prep.merge_delta(d_r, d_c, d_v, mode=mode)
+                    if merge.is_noop:  # nothing changed: keep the version
+                        return matrix_id  # and every cached mesh binding
+                    new_prep = merge.prepared
+                    new_plans, slots = {}, 0
+                    for spec, plan in plans.items():
+                        new_plans[spec], merge, s = cpart.plan_apply_delta(
+                            plan, prep, merge=merge)
+                        slots += s
+                else:
+                    # Degraded path: prepared dropped (byte pressure) or
+                    # never known (adopted operator) — decode and
+                    # re-encode cold.
+                    src = next(iter(plans.values()))
+                    r, c, v = src.to_coo()
+                    base = sformat.prepare(r, c, v, src.shape, src.config)
+                    merge = base.merge_delta(d_r, d_c, d_v, mode=mode)
+                    if merge.is_noop:
+                        return matrix_id
+                    new_prep = merge.prepared
+                    new_plans = {
+                        spec: cpart.plan_from_prepared(new_prep, spec)
+                        for spec in plans}
+                    slots = sum(int(p.idx.size)
+                                for p in new_plans.values())
+                dsp.args["slots"] = slots
             dt = time.perf_counter() - t0
             with self._lock:
                 entry = self._entries.get(matrix_id)
@@ -750,13 +772,17 @@ class MatrixRegistry:
         t0 = time.perf_counter()
         nw = (self.n_workers if (prep is not None and
                                  prep.nnz >= self.min_parallel_nnz) else 1)
-        if prep is not None:
-            plan = cpart.plan_from_prepared(
-                prep, spec, n_workers=nw,
-                pool=self._encode_pool() if nw > 1 else None)
-        else:
-            r, c, v = src.to_coo()
-            plan = cpart.make_plan(r, c, v, src.shape, src.config, spec)
+        with obs.span("repartition", cat="registry", matrix=matrix_id,
+                      partition=spec.partition, shards=spec.num_shards,
+                      workers=nw):
+            if prep is not None:
+                plan = cpart.plan_from_prepared(
+                    prep, spec, n_workers=nw,
+                    pool=self._encode_pool() if nw > 1 else None)
+            else:
+                r, c, v = src.to_coo()
+                plan = cpart.make_plan(r, c, v, src.shape, src.config,
+                                       spec)
         dt = time.perf_counter() - t0
         slots = int(plan.idx.size)
         with self._lock:
@@ -784,6 +810,7 @@ class MatrixRegistry:
                                   axis, backend)
 
     def evict(self, matrix_id: str) -> None:
+        obs.instant("evict", cat="registry", matrix=matrix_id)
         with self._lock:
             pending = self._pending.pop(matrix_id, None)
             if pending is not None:
@@ -796,6 +823,7 @@ class MatrixRegistry:
                 self.stats.evictions += 1
 
     def clear(self) -> None:
+        obs.instant("registry-clear", cat="registry")
         with self._lock:
             for pending in self._pending.values():
                 pending.cancelled = True
@@ -830,7 +858,10 @@ class MatrixRegistry:
         budget (``device_bytes_in_use``), and bindings are the first
         thing ``_evict_over_budget`` drops.
         """
-        op = SerpensOperator(plan, mesh=mesh, axis=axis, backend=backend)
+        with obs.span("bind", cat="registry", matrix=key,
+                      meshed=mesh is not None):
+            op = SerpensOperator(plan, mesh=mesh, axis=axis,
+                                 backend=backend)
         with self._lock:
             entry = self._entries.get(key)
             if entry is None or entry.content != content:

@@ -1,0 +1,33 @@
+"""Observability: tracing spans, metrics, and kernel-profiling hooks.
+
+Three layers, importable without jax (worker processes attach freely):
+
+* :mod:`repro.obs.trace` — lightweight span/instant/flow events in
+  per-thread ring buffers, exportable as Chrome/Perfetto ``trace_event``
+  JSON (:mod:`repro.obs.export`).  Disabled by default; every call on the
+  disabled path is a constant-time guard.
+* :mod:`repro.obs.metrics` — counters, gauges and fixed-bucket latency
+  histograms (exact percentile queries) in a :class:`MetricsRegistry`,
+  with Prometheus-style text exposition.
+* :mod:`repro.obs.profile` — optional ``jax.profiler`` trace integration
+  and the per-plan cost-model report behind
+  ``SerpensOperator.cost_report`` (jax imported lazily).
+
+Usage::
+
+    from repro import obs
+    obs.enable()
+    with obs.span("dispatch", matrix=mid):
+        ...
+    obs.write_chrome_trace("trace.json")   # load in ui.perfetto.dev
+"""
+from repro.obs.trace import (                               # noqa: F401
+    TRACER, Tracer, enable, disable, is_enabled, clear,
+    span, instant, event, flow_start, flow_step, flow_end,
+    capture_context, attach_context)
+from repro.obs.metrics import (                             # noqa: F401
+    REGISTRY, MetricsRegistry, Counter, Gauge, Histogram,
+    prometheus_text, DEFAULT_LATENCY_BUCKETS)
+from repro.obs.export import (                              # noqa: F401
+    export_chrome_trace, write_chrome_trace, validate_chrome_trace)
+from repro.obs import profile                               # noqa: F401

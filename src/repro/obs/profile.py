@@ -1,0 +1,113 @@
+"""Kernel-profiling hooks: jax.profiler integration + per-plan cost model.
+
+The paper's results are roofline points — achieved GB/s of A-stream
+traffic against the HBM peak — so a benchmark sweep wants, per run, the
+plan's *modeled* cost (stream bytes, slots, padding) next to its
+*measured* wall-time.  :func:`plan_cost_report` produces exactly that for
+any :class:`~repro.core.spmv.SerpensOperator` (surfaced as
+``op.cost_report()``), and :func:`profiler_trace` wraps a block in a
+``jax.profiler`` trace for TensorBoard/Perfetto-level kernel detail when
+available.
+
+jax is imported lazily so this module stays importable from numpy-only
+worker processes.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+import warnings
+
+# Assumed peak stream bandwidth for the modeled wall-time, GB/s.  The
+# paper's Serpens uses 16 HBM2 channels at ~12.9 GB/s effective each
+# (~206 GB/s aggregate); override per call for other parts.
+ASSUMED_BANDWIDTH_GBPS = 206.0
+
+
+def plan_cost_report(op, *, measure: bool = False,
+                     backend: str | None = None,
+                     bandwidth_gbps: float | None = None,
+                     iters: int = 3) -> dict:
+    """Cost-model report for one operator's channel-shard plan.
+
+    Per shard: nnz, slots, stream bytes, padding ratio, and the modeled
+    stream time ``bytes / bandwidth``.  With ``measure=True`` one matvec
+    is compiled + timed (median of ``iters``) and the report adds the
+    achieved GB/s and its fraction of the assumed peak — the roofline
+    position — plus per-shard measured time attributed proportionally to
+    stream bytes (shards dispatch in one call, so only the total is
+    directly observable).
+    """
+    bw = float(bandwidth_gbps or ASSUMED_BANDWIDTH_GBPS)
+    plan = op.plan
+    shards = []
+    for i, sm in enumerate(plan.shards):
+        sb = int(sm.stream_bytes)
+        shards.append({
+            "shard": i,
+            "nnz": int(sm.nnz),
+            "n_aux": int(sm.n_aux),
+            "slots": int(sm.idx.size),
+            "stream_bytes": sb,
+            "padding_ratio": float(sm.padding_ratio),
+            "est_stream_s": sb / (bw * 1e9),
+        })
+    total_bytes = int(plan.stream_bytes)
+    report = {
+        "shape": [int(s) for s in op.shape],
+        "nnz": int(plan.nnz),
+        "partition": plan.spec.partition,
+        "num_shards": int(plan.num_shards),
+        "stream_bytes": total_bytes,
+        "bytes_per_nnz": total_bytes / max(int(plan.nnz), 1),
+        "padded_slots": int(plan.idx.size),
+        "padding_ratio": float(plan.padding_ratio),
+        "assumed_bandwidth_gbps": bw,
+        "est_stream_s": total_bytes / (bw * 1e9),
+        "shards": shards,
+    }
+    if measure:
+        import numpy as np
+        import jax
+        x = np.random.default_rng(0).normal(
+            size=op.shape[1]).astype(np.float32)
+        jax.block_until_ready(op.matvec(x, backend=backend))  # compile
+        times = []
+        for _ in range(max(1, iters)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(op.matvec(x, backend=backend))
+            times.append(time.perf_counter() - t0)
+        times.sort()
+        measured = times[len(times) // 2]
+        report["measured_matvec_s"] = measured
+        report["achieved_gbps"] = total_bytes / measured / 1e9
+        report["roofline_fraction"] = report["achieved_gbps"] / bw
+        for sh in shards:
+            frac = sh["stream_bytes"] / max(total_bytes, 1)
+            sh["measured_s_attributed"] = measured * frac
+    return report
+
+
+@contextlib.contextmanager
+def profiler_trace(logdir: str | None):
+    """``jax.profiler`` trace around a block (TensorBoard/Perfetto logs).
+
+    No-op when ``logdir`` is falsy; degrades to a warning + no-op when
+    the profiler is unavailable (e.g. a build without profiling support),
+    so benchmark flags can pass it through unconditionally.
+    """
+    if not logdir:
+        yield
+        return
+    try:
+        import jax
+        jax.profiler.start_trace(str(logdir))
+    except Exception as e:                      # noqa: BLE001 — degrade
+        warnings.warn(f"jax profiler unavailable ({e}); continuing "
+                      f"without a device trace", stacklevel=2)
+        yield
+        return
+    try:
+        yield
+    finally:
+        jax.profiler.stop_trace()

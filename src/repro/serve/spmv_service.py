@@ -9,10 +9,19 @@ N×.  ``SpMVService`` productizes that: callers submit independent
 requests into SpMM calls whose width is padded to a power of two (bounding
 the set of compiled shapes), dispatches through the existing backends, and
 applies each request's private (α, β) epilogue column-wise.
+
+Observability: every request's lifecycle is traced (``obs.span`` +
+per-ticket flow arrows submit → dispatch → collect, visible in Perfetto),
+and the serving stats are backed by a :class:`~repro.obs.metrics
+.MetricsRegistry` — counters for the aggregate economics, latency
+histograms for the percentiles the SLO story needs.  ``stats`` /
+``stats_snapshot()`` remain the backward-compatible dataclass view over
+those metrics; ``snapshot()`` adds exact p50/p95/p99 dispatch latency.
 """
 from __future__ import annotations
 
 import dataclasses
+import logging
 import threading
 import time
 from collections import OrderedDict
@@ -20,7 +29,15 @@ from collections import OrderedDict
 import numpy as np
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.registry import MatrixRegistry
+from repro.obs.metrics import MetricsRegistry
+
+log = logging.getLogger("repro.serve")
+
+# Micro-batch width buckets are small powers of two, so batch-size buckets
+# are too (le-inclusive: a 16-wide batch lands in the 16 bucket).
+BATCH_SIZE_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024)
 
 
 def bucket_width(n: int, max_bucket: int) -> int:
@@ -55,6 +72,10 @@ class SpMVRequest:
     # request dispatches, it fails explicitly instead of being silently
     # served against a matrix it was never submitted to.
     expect_content: str | None = None
+    # Caller identity for per-owner accounting (defaults to the submitting
+    # thread's name): when the bounded result store prunes this request's
+    # uncollected result, the drop is charged to its owner.
+    owner: str | None = None
 
 
 @dataclasses.dataclass
@@ -70,6 +91,7 @@ class SpMVResult:
     # matrix was evicted, or its background encode failed); ``result()``
     # re-raises it to the collecting caller.
     error: BaseException | None = None
+    owner: str | None = None
 
 
 @dataclasses.dataclass
@@ -106,7 +128,8 @@ class SpMVService:
     def __init__(self, registry: MatrixRegistry, max_bucket: int = 16,
                  backend: str | None = None, mesh=None,
                  axis: str | None = None, partition: str | None = None,
-                 max_stored_results: int = 4096):
+                 max_stored_results: int = 4096,
+                 metrics: MetricsRegistry | None = None):
         if max_bucket < 1 or max_bucket & (max_bucket - 1):
             raise ValueError("max_bucket must be a power of two >= 1")
         if mesh is not None and axis is None:
@@ -123,13 +146,40 @@ class SpMVService:
         self.mesh = mesh
         self.axis = axis
         self.partition = partition
-        self.stats = ServiceStats()
+        # The serving stats live in a MetricsRegistry (private per service
+        # by default, so two services never alias counters; pass
+        # metrics=obs.REGISTRY to scrape several on one page).  The
+        # ServiceStats dataclass remains as the read view (`stats`),
+        # assembled under the service lock so cross-metric ratios never
+        # tear.  Mutations happen under the same lock for the same reason.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        m = self.metrics
+        self._m_batches = m.counter(
+            "spmv_batches_total", "SpMM dispatches")
+        self._m_vectors = m.counter(
+            "spmv_vectors_total", "real vectors (requests) served")
+        self._m_stream_bytes = m.counter(
+            "spmv_stream_bytes_total", "A-stream bytes dispatched")
+        self._m_deferred = m.counter(
+            "spmv_deferred_total",
+            "requests re-queued at flush (matrix still encoding)")
+        self._m_dropped = m.counter(
+            "spmv_results_dropped_total",
+            "uncollected results pruned from the bounded store, by owner")
+        self._m_dispatch_lat = m.histogram(
+            "spmv_dispatch_latency_seconds",
+            "submit -> result-materialized latency per request")
+        self._m_flush = m.histogram(
+            "spmv_flush_seconds", "wall time of each flush() call")
+        self._m_batch_size = m.histogram(
+            "spmv_batch_size", "real requests coalesced per SpMM dispatch",
+            buckets=BATCH_SIZE_BUCKETS, max_samples=0)
         # submit() is thread-safe, and flush() may run on any thread: each
         # flush deposits finished results in a completed-results store
         # keyed by ticket, and every caller collects *its own* tickets via
         # result() — so one thread's flush cannot swallow another thread's
         # requests.  Uncollected results beyond max_stored_results are
-        # pruned oldest-first (stats.results_dropped).
+        # pruned oldest-first (stats.results_dropped, charged per owner).
         self._lock = threading.Lock()
         self._result_cv = threading.Condition(self._lock)
         self._results: "OrderedDict[int, SpMVResult]" = OrderedDict()
@@ -139,45 +189,53 @@ class SpMVService:
 
     # -- submission -------------------------------------------------------
     def submit(self, matrix_id: str, x, alpha: float = 1.0,
-               beta: float = 0.0, y=None) -> int:
+               beta: float = 0.0, y=None, owner: str | None = None) -> int:
         """Queue one ``y_out = α·A·x + β·y`` request; returns a ticket.
 
         Matrices still encoding in the background (``put(blocking=False)``)
         are accepted without blocking: the request queues with no operator
         and resolves at a later ``flush`` once the registry reports the
         entry ready — the dispatcher thread never stalls on a cold start.
+
+        ``owner`` names the caller for per-owner drop accounting (default:
+        the submitting thread's name).
         """
-        expect = None
-        if self.registry.ready(matrix_id):  # KeyError when unknown
-            op = self.registry.get(         # refreshes LRU
-                matrix_id, mesh=self.mesh, axis=self.axis,
-                partition=self.partition)
-            m_len, k_len = op.shape
-        else:
-            op = None                       # resolved at flush time
-            m_len, k_len = self.registry.shape(matrix_id)
-            expect = self.registry.content(matrix_id)
-        # Copy on enqueue: the caller may reuse/mutate its buffer before
-        # flush (np.asarray would alias an already-float32 input).
-        x = np.array(x, np.float32)
-        if x.ndim != 1 or x.shape[0] != k_len:
-            raise ValueError(
-                f"x has shape {x.shape}; matrix {matrix_id!r} needs a "
-                f"length-{k_len} vector")
-        if beta != 0.0 and y is None:
-            raise ValueError("beta != 0 requires y")
-        if y is not None:
-            y = np.array(y, np.float32)
-            if y.shape != (m_len,):
+        with obs.span("submit", matrix=matrix_id):
+            expect = None
+            if self.registry.ready(matrix_id):  # KeyError when unknown
+                op = self.registry.get(         # refreshes LRU
+                    matrix_id, mesh=self.mesh, axis=self.axis,
+                    partition=self.partition)
+                m_len, k_len = op.shape
+            else:
+                op = None                       # resolved at flush time
+                m_len, k_len = self.registry.shape(matrix_id)
+                expect = self.registry.content(matrix_id)
+            # Copy on enqueue: the caller may reuse/mutate its buffer before
+            # flush (np.asarray would alias an already-float32 input).
+            x = np.array(x, np.float32)
+            if x.ndim != 1 or x.shape[0] != k_len:
                 raise ValueError(
-                    f"y has shape {y.shape}; expected ({m_len},)")
-        with self._lock:
-            ticket = self._next_ticket
-            self._next_ticket += 1
-            self._pending.append(SpMVRequest(
-                ticket=ticket, matrix_id=matrix_id, op=op, x=x,
-                alpha=float(alpha), beta=float(beta), y=y,
-                submit_time=time.perf_counter(), expect_content=expect))
+                    f"x has shape {x.shape}; matrix {matrix_id!r} needs a "
+                    f"length-{k_len} vector")
+            if beta != 0.0 and y is None:
+                raise ValueError("beta != 0 requires y")
+            if y is not None:
+                y = np.array(y, np.float32)
+                if y.shape != (m_len,):
+                    raise ValueError(
+                        f"y has shape {y.shape}; expected ({m_len},)")
+            if owner is None:
+                owner = threading.current_thread().name
+            with self._lock:
+                ticket = self._next_ticket
+                self._next_ticket += 1
+                self._pending.append(SpMVRequest(
+                    ticket=ticket, matrix_id=matrix_id, op=op, x=x,
+                    alpha=float(alpha), beta=float(beta), y=y,
+                    submit_time=time.perf_counter(), expect_content=expect,
+                    owner=owner))
+            obs.flow_start("request", ticket, matrix=matrix_id)
         return ticket
 
     def update(self, matrix_id: str, delta_rows, delta_cols,
@@ -203,12 +261,31 @@ class SpMVService:
         with self._lock:            # submit/flush mutate under the lock
             return len(self._pending)
 
-    def stats_snapshot(self) -> ServiceStats:
-        """Consistent copy of the serving stats (reads under the lock —
-        ``stats`` is mutated field-by-field by concurrent dispatches, so
-        derived ratios read from the raw object can tear)."""
+    def _stats_locked(self) -> ServiceStats:
+        """Assemble the dataclass view from the metrics (lock held, so a
+        concurrent dispatch can't land between two counter reads)."""
+        return ServiceStats(
+            batches=int(self._m_batches.total()),
+            stream_bytes=int(self._m_stream_bytes.total()),
+            vectors=int(self._m_vectors.total()),
+            deferred=int(self._m_deferred.total()),
+            results_dropped=int(self._m_dropped.total()))
+
+    @property
+    def stats(self) -> ServiceStats:
+        """Consistent dataclass view over the serving metrics (reads
+        under the lock — cross-metric ratios must never tear)."""
         with self._lock:
-            return dataclasses.replace(self.stats)
+            return self._stats_locked()
+
+    def stats_snapshot(self) -> ServiceStats:
+        """Alias of :attr:`stats`, kept for API compatibility."""
+        return self.stats
+
+    def results_dropped_by_owner(self) -> dict[str, int]:
+        """{owner: dropped results} — the per-caller loss accounting."""
+        return {(dict(k).get("owner", "unknown")): int(v)
+                for k, v in self._m_dropped.items().items()}
 
     def snapshot(self) -> dict:
         """Serving + preprocessing economics in one dict.
@@ -217,16 +294,24 @@ class SpMVService:
         encode-side numbers (wall-time, slot throughput): the host encode is
         the cold-start cost of every matrix this service fronts, and the
         incremental update path is its steady-state cost under a changing
-        matrix, so a dashboard wants all three on the same page.
+        matrix, so a dashboard wants all three on the same page.  Latency
+        percentiles are exact over the histogram's retained window.
         """
-        ss = self.stats_snapshot()
+        ss = self.stats
         rs = self.registry.stats_snapshot()   # consistent under the lock
+        lat = self._m_dispatch_lat
         return {
             "batches": ss.batches,
             "vectors": ss.vectors,
             "mean_batch_size": ss.mean_batch_size,
             "amortized_bytes_per_vector": ss.amortized_bytes_per_vector,
             "deferred": ss.deferred,
+            "results_dropped": ss.results_dropped,
+            "results_dropped_by_owner": self.results_dropped_by_owner(),
+            "dispatch_latency_p50": lat.percentile(50),
+            "dispatch_latency_p95": lat.percentile(95),
+            "dispatch_latency_p99": lat.percentile(99),
+            "dispatch_latency_mean": lat.mean,
             "encodes": rs.encodes,
             "encode_seconds": rs.encode_seconds,
             "mean_encode_s": (rs.encode_seconds / rs.encodes
@@ -256,6 +341,13 @@ class SpMVService:
         their own tickets via :meth:`result` even when *this* thread's
         flush dispatched them.
         """
+        t_flush = time.perf_counter()
+        with obs.span("flush") as flush_sp:
+            results = self._flush_inner(flush_sp)
+        self._m_flush.observe(time.perf_counter() - t_flush)
+        return results
+
+    def _flush_inner(self, flush_sp) -> dict[int, SpMVResult]:
         with self._lock:
             pending, self._pending = self._pending, []
         # Resolve requests submitted against matrices that were still
@@ -294,30 +386,40 @@ class SpMVService:
                             f"{op.shape} while its encode was pending")
                     req.op = op
                 except Exception as e:     # noqa: BLE001 — routed to caller
+                    obs.instant("request-failed", ticket=req.ticket,
+                                matrix=req.matrix_id, error=str(e))
                     failed.append(SpMVResult(
                         ticket=req.ticket, y=None, latency_s=0.0,
                         batch_size=0, bucket_n=0,
-                        stream_bytes_per_vector=0.0, error=e))
+                        stream_bytes_per_vector=0.0, error=e,
+                        owner=req.owner))
                     continue
             ready_reqs.append(req)
         if deferred or failed:
             with self._result_cv:
                 if deferred:
                     self._pending[:0] = deferred
-                    self.stats.deferred += len(deferred)
+                    self._m_deferred.add(len(deferred))
                 for res in failed:
                     self._deposit(res)
                 self._result_cv.notify_all()
+            for req in deferred:
+                obs.instant("request-deferred", ticket=req.ticket,
+                            matrix=req.matrix_id)
         # Coalesce on the operator captured at submit time: still valid even
         # if the registry evicted the id since, and two requests only share
         # a batch when they truly share a matrix (an id re-registered with
         # new content mid-queue lands in its own group).
-        groups: dict[int, list[SpMVRequest]] = {}
-        for req in ready_reqs:
-            groups.setdefault(id(req.op), []).append(req)
-        batches = [reqs[i:i + self.max_bucket]
-                   for reqs in groups.values()
-                   for i in range(0, len(reqs), self.max_bucket)]
+        with obs.span("coalesce", requests=len(ready_reqs)) as co_sp:
+            groups: dict[int, list[SpMVRequest]] = {}
+            for req in ready_reqs:
+                groups.setdefault(id(req.op), []).append(req)
+            batches = [reqs[i:i + self.max_bucket]
+                       for reqs in groups.values()
+                       for i in range(0, len(reqs), self.max_bucket)]
+            co_sp.args["batches"] = len(batches)
+        flush_sp.args.update(requests=len(pending), batches=len(batches),
+                             deferred=len(deferred))
         results: dict[int, SpMVResult] = {}
         for bi, batch in enumerate(batches):
             try:
@@ -331,10 +433,11 @@ class SpMVService:
                 # half-rolled-back state.
                 with self._lock:
                     for done in batches[:bi]:
-                        self.stats.batches -= 1
-                        self.stats.vectors -= len(done)
-                        self.stats.stream_bytes -= done[0].op.stream_bytes
+                        self._m_batches.add(-1)
+                        self._m_vectors.add(-len(done))
+                        self._m_stream_bytes.add(-done[0].op.stream_bytes)
                     self._pending[:0] = [r for b in batches for r in b]
+                obs.instant("flush-failed", batches_rolled_back=bi)
                 raise
         with self._result_cv:
             for res in results.values():
@@ -343,11 +446,24 @@ class SpMVService:
         return results
 
     def _deposit(self, res: SpMVResult) -> None:
-        """Store a finished result for result() pickup (lock held)."""
+        """Store a finished result for result() pickup (lock held).
+
+        Pruning an uncollected result is silent data loss for its caller,
+        so every prune is charged to the dropped ticket's owner
+        (``spmv_results_dropped_total{owner=...}``) and logged as a
+        structured warning — visible long before per-caller queues land.
+        """
         self._results[res.ticket] = res
         while len(self._results) > self.max_stored_results:
-            self._results.popitem(last=False)
-            self.stats.results_dropped += 1
+            _, old = self._results.popitem(last=False)
+            owner = old.owner or "unknown"
+            self._m_dropped.inc(owner=owner)
+            obs.instant("result-dropped", ticket=old.ticket, owner=owner)
+            log.warning(
+                "spmv_result_dropped ticket=%d owner=%s matrix_batch=%d "
+                "stored=%d max_stored_results=%d",
+                old.ticket, owner, old.batch_size, len(self._results),
+                self.max_stored_results)
 
     def result(self, ticket: int, timeout: float | None = None
                ) -> SpMVResult:
@@ -362,17 +478,20 @@ class SpMVService:
         """
         deadline = (None if timeout is None
                     else time.perf_counter() + timeout)
-        with self._result_cv:
-            if not 0 <= ticket < self._next_ticket:
-                raise KeyError(f"unknown ticket {ticket}")
-            while ticket not in self._results:
-                remaining = (None if deadline is None
-                             else deadline - time.perf_counter())
-                if remaining is not None and remaining <= 0:
-                    raise TimeoutError(
-                        f"ticket {ticket} not completed within {timeout}s")
-                self._result_cv.wait(remaining)
-            res = self._results.pop(ticket)
+        with obs.span("result-collect", ticket=ticket):
+            with self._result_cv:
+                if not 0 <= ticket < self._next_ticket:
+                    raise KeyError(f"unknown ticket {ticket}")
+                while ticket not in self._results:
+                    remaining = (None if deadline is None
+                                 else deadline - time.perf_counter())
+                    if remaining is not None and remaining <= 0:
+                        raise TimeoutError(
+                            f"ticket {ticket} not completed within "
+                            f"{timeout}s")
+                    self._result_cv.wait(remaining)
+                res = self._results.pop(ticket)
+            obs.flow_end("request", ticket)
         if res.error is not None:
             raise res.error
         return res
@@ -406,6 +525,7 @@ class SpMVService:
                     if t not in flushed:
                         continue
                     out[t] = flushed[t]
+                    obs.flow_end("request", t)
                 waiting.remove(t)
             if waiting and deadline is not None \
                     and time.perf_counter() >= deadline:
@@ -418,38 +538,52 @@ class SpMVService:
                   results: dict[int, SpMVResult]) -> None:
         n = len(batch)
         width = bucket_width(n, self.max_bucket)
-        if n == 1 and width == 1:
-            # Single-request fast path: the paper's plain SpMV.
-            req = batch[0]
-            acc = op.matvec(req.x, backend=self.backend)
-            out = req.alpha * acc
-            if req.beta != 0.0:
-                out = out + req.beta * jnp.asarray(req.y, jnp.float32)
-            ys = np.asarray(out, np.float32)[:, None]
-        else:
-            x_mat = np.zeros((op.shape[1], width), np.float32)
-            y_mat = np.zeros((op.shape[0], width), np.float32)
-            alphas = np.zeros((width,), np.float32)
-            betas = np.zeros((width,), np.float32)
+        with obs.span("dispatch", matrix=batch[0].matrix_id, batch=n,
+                      bucket=width):
+            for req in batch:
+                obs.flow_step("request", req.ticket)
+            if n == 1 and width == 1:
+                # Single-request fast path: the paper's plain SpMV.
+                req = batch[0]
+                with obs.span("compute", kind="matvec"):
+                    acc = op.matvec(req.x, backend=self.backend)
+                    out = req.alpha * acc
+                    if req.beta != 0.0:
+                        out = out + req.beta * jnp.asarray(req.y,
+                                                           jnp.float32)
+                with obs.span("device-block"):
+                    ys = np.asarray(out, np.float32)[:, None]
+            else:
+                with obs.span("pack", bucket=width):
+                    x_mat = np.zeros((op.shape[1], width), np.float32)
+                    y_mat = np.zeros((op.shape[0], width), np.float32)
+                    alphas = np.zeros((width,), np.float32)
+                    betas = np.zeros((width,), np.float32)
+                    for j, req in enumerate(batch):
+                        x_mat[:, j] = req.x
+                        alphas[j] = req.alpha
+                        betas[j] = req.beta
+                        if req.y is not None:
+                            y_mat[:, j] = req.y
+                with obs.span("compute", kind="matmat"):
+                    acc = op.matmat(x_mat, backend=self.backend)  # raw A @ X
+                    out = (acc * jnp.asarray(alphas)[None, :]
+                           + jnp.asarray(y_mat) * jnp.asarray(betas)[None, :])
+                with obs.span("device-block"):
+                    ys = np.asarray(out, np.float32)
+            done = time.perf_counter()
+            bytes_per_vec = op.stream_bytes / n
+            with self._lock:
+                self._m_batches.inc()
+                self._m_vectors.add(n)
+                self._m_stream_bytes.add(op.stream_bytes)
+                self._m_batch_size.observe(n)
+                for req in batch:
+                    self._m_dispatch_lat.observe(done - req.submit_time)
             for j, req in enumerate(batch):
-                x_mat[:, j] = req.x
-                alphas[j] = req.alpha
-                betas[j] = req.beta
-                if req.y is not None:
-                    y_mat[:, j] = req.y
-            acc = op.matmat(x_mat, backend=self.backend)   # raw A @ X
-            out = (acc * jnp.asarray(alphas)[None, :]
-                   + jnp.asarray(y_mat) * jnp.asarray(betas)[None, :])
-            ys = np.asarray(out, np.float32)
-        done = time.perf_counter()
-        bytes_per_vec = op.stream_bytes / n
-        with self._lock:
-            self.stats.batches += 1
-            self.stats.vectors += n
-            self.stats.stream_bytes += op.stream_bytes
-        for j, req in enumerate(batch):
-            results[req.ticket] = SpMVResult(
-                ticket=req.ticket, y=ys[:, j],
-                latency_s=done - req.submit_time,
-                batch_size=n, bucket_n=width,
-                stream_bytes_per_vector=bytes_per_vec)
+                results[req.ticket] = SpMVResult(
+                    ticket=req.ticket, y=ys[:, j],
+                    latency_s=done - req.submit_time,
+                    batch_size=n, bucket_n=width,
+                    stream_bytes_per_vector=bytes_per_vec,
+                    owner=req.owner)

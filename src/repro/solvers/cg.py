@@ -12,6 +12,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 
 @dataclasses.dataclass
 class CGResult:
@@ -65,8 +67,10 @@ def conjugate_gradient(op, b, x0=None, tol: float = 1e-6,
         p_new = r_new + beta * p
         return x_new, r_new, p_new, rs_new, it + 1
 
-    x, r, _, rs, iters = jax.lax.while_loop(
-        cond, body, (x_init, r_init, r_init, rs_init, jnp.int32(0)))
-    res = float(jnp.sqrt(rs))
+    with obs.span("conjugate-gradient", cat="solver", n=m) as sp:
+        x, r, _, rs, iters = jax.lax.while_loop(
+            cond, body, (x_init, r_init, r_init, rs_init, jnp.int32(0)))
+        res = float(jnp.sqrt(rs))      # blocks until the solve finishes
+        sp.args.update(iterations=int(iters), residual=res)
     return CGResult(x=x, iterations=int(iters), residual=res,
                     converged=res <= float(stop))

@@ -12,6 +12,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 
 @dataclasses.dataclass
 class PowerResult:
@@ -65,9 +67,12 @@ def pagerank(op, damping: float = 0.85, tol: float = 1e-9,
         delta = jnp.sum(jnp.abs(r_new - r))
         return r_new, delta, it + 1
 
-    r, delta, iters = jax.lax.while_loop(
-        cond, body, (r_init, jnp.float32(jnp.inf), jnp.int32(0)))
-    delta = float(delta)
+    with obs.span("pagerank", cat="solver", n=n,
+                  damping=float(damping)) as sp:
+        r, delta, iters = jax.lax.while_loop(
+            cond, body, (r_init, jnp.float32(jnp.inf), jnp.int32(0)))
+        delta = float(delta)           # blocks until the solve finishes
+        sp.args.update(iterations=int(iters), residual=delta)
     return PowerResult(x=r, iterations=int(iters), residual=delta,
                        converged=delta <= tol)
 
@@ -101,9 +106,12 @@ def power_iteration(op, tol: float = 1e-6, max_iters: int = 200,
         v_new = jnp.where(nrm > 0, av / jnp.maximum(nrm, 1e-30), v)
         return v_new, lam, res, it + 1
 
-    v, lam, res, iters = jax.lax.while_loop(
-        cond, body,
-        (v_init, jnp.float32(0.0), jnp.float32(jnp.inf), jnp.int32(0)))
-    res = float(res)
+    with obs.span("power-iteration", cat="solver", n=n) as sp:
+        v, lam, res, iters = jax.lax.while_loop(
+            cond, body,
+            (v_init, jnp.float32(0.0), jnp.float32(jnp.inf),
+             jnp.int32(0)))
+        res = float(res)               # blocks until the solve finishes
+        sp.args.update(iterations=int(iters), residual=res)
     return PowerResult(x=v, iterations=int(iters), residual=res,
                        eigenvalue=float(lam), converged=res <= tol)
