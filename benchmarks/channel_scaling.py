@@ -68,7 +68,8 @@ def run(dry_run: bool = False, out_path: str = DEFAULT_OUT,
         # The channel a mesh waits on is the busiest shard's stream
         # (stacked slot count is uniform; aux spill varies per shard).
         per_shard = (int(plan.idx.shape[1] * plan.idx.shape[2]
-                         * plan.idx.shape[3]) * 8
+                         * plan.idx.shape[3])
+                     * (4 + plan.config.value_bytes)
                      + 12 * max(sm.n_aux for sm in plan.shards))
         modeled = base_bytes / max(per_shard, 1)
         row = {

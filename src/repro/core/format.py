@@ -47,6 +47,40 @@ SENTINEL = np.int32(-1)  # null element (paper: padded null non-zeros)
 ROW_BITS = 16
 COL_MASK = (1 << ROW_BITS) - 1
 
+# Value-stream precisions.  The packed slot is the int32 index word plus one
+# value: fp32 values give the paper's 8 B slot; bf16 values cut it to 6 B
+# (~25-30% stream-byte reduction at equal nnz), with all *accumulation*
+# staying fp32 in the kernels (values are rounded exactly once, at stream
+# materialization).  The aux spill side-stream always stays fp32 COO
+# (12 B/entry) — it is tiny and hot by construction.
+VALUE_DTYPES = ("float32", "bfloat16")
+
+
+def value_np_dtype(value_dtype: str) -> np.dtype:
+    """The numpy dtype of a value stream (``ml_dtypes`` supplies bf16).
+
+    ``ml_dtypes`` is a numpy-only package (shipped as a jax dependency), so
+    worker processes that must never import jax can still encode bf16
+    streams.  A clear error is raised if it is missing.
+    """
+    if value_dtype == "float32":
+        return np.dtype(np.float32)
+    if value_dtype == "bfloat16":
+        try:
+            import ml_dtypes
+        except ImportError as e:                    # pragma: no cover
+            raise ImportError(
+                "value_dtype='bfloat16' needs the ml_dtypes package "
+                "(installed with jax); use value_dtype='float32'") from e
+        return np.dtype(ml_dtypes.bfloat16)
+    raise ValueError(
+        f"value_dtype must be one of {VALUE_DTYPES}, got {value_dtype!r}")
+
+
+def value_nbytes(value_dtype: str) -> int:
+    """Bytes per stream value (4 for fp32, 2 for bf16)."""
+    return 4 if value_dtype == "float32" else 2
+
 
 @dataclasses.dataclass(frozen=True)
 class SerpensConfig:
@@ -63,6 +97,9 @@ class SerpensConfig:
         tile-conflict-freedom requirement is T = sublanes).
       tiles_per_chunk: how many (sublanes × lanes) tiles form one grid step of
         the kernel (larger ⇒ fewer grid steps, more per-segment padding).
+      value_dtype: precision of the packed value stream — ``"float32"``
+        (the paper's 8 B slot) or ``"bfloat16"`` (6 B slot, fp32
+        accumulation in the kernels; see :data:`VALUE_DTYPES`).
     """
 
     segment_width: int = 8192
@@ -70,6 +107,7 @@ class SerpensConfig:
     sublanes: int = 8
     raw_window: int = 8
     tiles_per_chunk: int = 1
+    value_dtype: str = "float32"
     # Beyond-paper (§Perf C3): cap any row's entries per (segment, lane) at
     # ~n_lane/raw_window and divert the excess to a small auxiliary COO
     # that the epilogue scatter-adds.  Kills the hot-row padding blowup on
@@ -93,6 +131,20 @@ class SerpensConfig:
             raise ValueError("tiles_per_chunk must be >= 1")
         if self.lane_balance < 0:
             raise ValueError("lane_balance must be >= 0")
+        if self.value_dtype not in VALUE_DTYPES:
+            raise ValueError(
+                f"value_dtype must be one of {VALUE_DTYPES}, "
+                f"got {self.value_dtype!r}")
+
+    @property
+    def np_value_dtype(self) -> np.dtype:
+        """Numpy dtype of the value stream arrays."""
+        return value_np_dtype(self.value_dtype)
+
+    @property
+    def value_bytes(self) -> int:
+        """Bytes per stream value (4 for fp32, 2 for bf16)."""
+        return value_nbytes(self.value_dtype)
 
 
 # Paper-faithful geometry (Sec. 3.2-3.4): W=8192, RAW window = one tile.
@@ -156,7 +208,7 @@ class SerpensMatrix:
     config: SerpensConfig
     # Stream arrays (numpy on host; moved to device by kernels/ops.py):
     idx: np.ndarray  # int32 [num_tiles, sublanes, lanes]: (row_local<<16)|col_local
-    val: np.ndarray  # float32 [num_tiles, sublanes, lanes]
+    val: np.ndarray  # config.np_value_dtype [num_tiles, sublanes, lanes]
     seg_ids: np.ndarray  # int32 [num_tiles] — x segment id per tile (ascending)
     num_segments: int
     # Hot-row spill side-stream (empty unless config.spill_hot_rows):
@@ -183,9 +235,11 @@ class SerpensMatrix:
 
     @property
     def stream_bytes(self) -> int:
-        """Off-chip bytes for one pass over A: 8 B per stream slot (incl.
-        padding) + 12 B per spilled aux entry (COO row/col/val)."""
-        return int(self.idx.size) * 8 + 12 * self.n_aux
+        """Off-chip bytes for one pass over A: 4 B index + one value per
+        stream slot (incl. padding) — 8 B/slot at fp32, 6 B/slot at bf16 —
+        + 12 B per spilled aux entry (fp32 COO row/col/val)."""
+        per_slot = 4 + self.config.value_bytes
+        return int(self.idx.size) * per_slot + 12 * self.n_aux
 
     @property
     def padding_ratio(self) -> float:
@@ -583,10 +637,12 @@ def _encode_stream(order, shard, rows_loc, cols_loc, vals, n_shards: int,
     spc = sub * cfg.tiles_per_chunk
     num_segments = max(1, -(-k_l // w))
 
+    vdt = cfg.np_value_dtype
+
     def null_stream():
         idx = np.full((cfg.tiles_per_chunk, sub, lanes), SENTINEL,
                       dtype=np.int32)
-        return (idx, np.zeros(idx.shape, np.float32),
+        return (idx, np.zeros(idx.shape, vdt),
                 np.zeros((cfg.tiles_per_chunk,), np.int32))
 
     shard = np.asarray(shard, np.int64)
@@ -814,7 +870,11 @@ def _encode_stream(order, shard, rows_loc, cols_loc, vals, n_shards: int,
     gbase = (np.cumsum(depth) - depth).astype(I2)
     grow = np.repeat(gbase, S_sizes) + slot.astype(I2)
     idx_flat = np.full((total * lanes,), SENTINEL, np.int32)
-    val_flat = np.zeros((total * lanes,), np.float32)
+    # Values are rounded to the stream dtype exactly once, here — the
+    # master triples stay fp32 (PreparedCOO), so incremental re-encodes
+    # round identically to a cold encode (bf16(v) is deterministic and
+    # bf16(bf16(v)) == bf16(v)).
+    val_flat = np.zeros((total * lanes,), vdt)
     ln = (bk & (lanes - 1) if not lanes & (lanes - 1)
           else bk % lanes).astype(I2)
     flat_pos = grow * I2(lanes) + ln
@@ -875,7 +935,7 @@ def splice_encoded(old: SerpensMatrix, mini: SerpensMatrix | None,
         """Tile/aux arrays with the null-chunk placeholder stripped."""
         if sm is None or sm.nnz - sm.n_aux <= 0:
             return (np.zeros((0, sub, lanes), np.int32),
-                    np.zeros((0, sub, lanes), np.float32),
+                    np.zeros((0, sub, lanes), cfg.np_value_dtype),
                     np.zeros((0,), np.int32),
                     _empty_i32(), _empty_i32(), _empty_f32(),
                     np.zeros((0,), np.int64))
@@ -910,7 +970,7 @@ def splice_encoded(old: SerpensMatrix, mini: SerpensMatrix | None,
     if idx.shape[0] == 0:          # stream emptied: keep shapes static
         idx = np.full((cfg.tiles_per_chunk, sub, lanes), SENTINEL,
                       np.int32)
-        val = np.zeros(idx.shape, np.float32)
+        val = np.zeros(idx.shape, cfg.np_value_dtype)
         seg_ids = np.zeros((cfg.tiles_per_chunk,), np.int32)
     return SerpensMatrix(
         shape=old.shape, nnz=int(nnz_new), config=cfg,
@@ -1063,7 +1123,7 @@ def encode_reference(
         depth = max(slots_per_lane_chunk,
                     -(-depth // slots_per_lane_chunk) * slots_per_lane_chunk)
         idx_mat = np.full((depth, cfg.lanes), SENTINEL, dtype=np.int32)
-        val_mat = np.zeros((depth, cfg.lanes), dtype=np.float32)
+        val_mat = np.zeros((depth, cfg.lanes), dtype=cfg.np_value_dtype)
         for lane in range(cfg.lanes):
             lr, lc, lv = lane_sched[lane]
             if not lr:
@@ -1086,7 +1146,7 @@ def encode_reference(
     else:  # all-zero matrix: one null chunk keeps shapes static
         idx = np.full((cfg.tiles_per_chunk, cfg.sublanes, cfg.lanes), SENTINEL,
                       dtype=np.int32)
-        val = np.zeros(idx.shape, dtype=np.float32)
+        val = np.zeros(idx.shape, dtype=cfg.np_value_dtype)
         seg_ids = np.zeros((cfg.tiles_per_chunk,), dtype=np.int32)
 
     # Chunk alignment: the kernel grid steps over whole chunks.
@@ -1095,7 +1155,8 @@ def encode_reference(
         pad = cfg.tiles_per_chunk - rem
         idx = np.concatenate(
             [idx, np.full((pad,) + idx.shape[1:], SENTINEL, dtype=np.int32)])
-        val = np.concatenate([val, np.zeros((pad,) + val.shape[1:], np.float32)])
+        val = np.concatenate([val, np.zeros((pad,) + val.shape[1:],
+                                            val.dtype)])
         seg_ids = np.concatenate(
             [seg_ids, np.full((pad,), seg_ids[-1], dtype=np.int32)])
 

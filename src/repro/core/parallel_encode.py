@@ -445,7 +445,7 @@ def _parallel_encode(rows, cols, vals, shape, config, spec, *,
         else:                       # no live stream entries: null chunk
             idx = np.full((config.tiles_per_chunk, config.sublanes,
                            config.lanes), sformat.SENTINEL, np.int32)
-            val = np.zeros(idx.shape, np.float32)
+            val = np.zeros(idx.shape, config.np_value_dtype)
             seg_ids = np.zeros((config.tiles_per_chunk,), np.int32)
         shards_out.append(sformat.SerpensMatrix(
             shape=shape_local, nnz=int(nnz_shard[d]), config=config,

@@ -75,7 +75,7 @@ class ChannelShardPlan:
     num_segments_local: int         # x segments per shard (uniform)
     # Stacked host arrays, leading dim = num_shards:
     idx: np.ndarray                 # int32 [N, T, SUB, LANES]
-    val: np.ndarray                 # float32 [N, T, SUB, LANES]
+    val: np.ndarray                 # config.np_value_dtype [N, T, SUB, LANES]
     seg_ids: np.ndarray             # int32 [N, T]
     aux_rows: np.ndarray            # int32 [N, A] (A = max aux len, 0-padded)
     aux_cols: np.ndarray            # int32 [N, A]
@@ -101,8 +101,10 @@ class ChannelShardPlan:
     @property
     def stream_bytes(self) -> int:
         """Off-chip bytes for one pass over all shards, including the
-        cross-shard tile padding (8 B/slot) and spilled aux COO entries."""
-        return int(self.idx.size) * 8 + 12 * self.n_aux
+        cross-shard tile padding (8 B/slot at fp32, 6 B/slot at bf16) and
+        spilled aux COO entries (12 B each, always fp32)."""
+        per_slot = 4 + self.config.value_bytes
+        return int(self.idx.size) * per_slot + 12 * self.n_aux
 
     @property
     def padding_ratio(self) -> float:
@@ -150,7 +152,7 @@ def _pad_stack(mats: list[sformat.SerpensMatrix]):
             [m.idx, np.full((pad,) + m.idx.shape[1:], sformat.SENTINEL,
                             np.int32)]))
         val.append(np.concatenate(
-            [m.val, np.zeros((pad,) + m.val.shape[1:], np.float32)]))
+            [m.val, np.zeros((pad,) + m.val.shape[1:], m.val.dtype)]))
         seg.append(np.concatenate(
             [m.seg_ids, np.full((pad,), m.seg_ids[-1], np.int32)]))
     return (np.stack(idx), np.stack(val), np.stack(seg))

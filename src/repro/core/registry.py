@@ -293,9 +293,10 @@ class MatrixRegistry:
     def encode_stats(self) -> dict[str, dict]:
         """Per-entry encode economics: wall-time and slot throughput.
 
-        Slots are stream elements (8 B each, padding included) — the unit
-        the paper's bandwidth model streams, so slots/s is directly the
-        host-side preprocessing rate the accelerator must not outrun.
+        Slots are stream elements (padding included; 8 B each at fp32
+        values, 6 B at bf16) — the unit the paper's bandwidth model
+        streams, so slots/s is directly the host-side preprocessing rate
+        the accelerator must not outrun.
         """
         with self._lock:
             return {key: {"encode_seconds": e.encode_seconds,
@@ -395,12 +396,17 @@ class MatrixRegistry:
 
     def put(self, rows, cols, vals, shape, *, config=None, backend=None,
             matrix_id: str | None = None, partition: str = "single",
-            num_shards: int = 1, blocking: bool = True) -> str:
+            num_shards: int = 1, value_dtype: str | None = None,
+            blocking: bool = True) -> str:
         """Ensure the matrix's plan is cached; return its id.
 
         A repeat ``put`` of the same content + geometry is a *hit*: the
         encode does not re-run.  ``partition``/``num_shards`` choose the
-        channel-shard geometry (part of the content key).  Pass
+        channel-shard geometry (part of the content key).  ``value_dtype``
+        overrides the config's value-stream dtype (``"float32"`` /
+        ``"bfloat16"``) without constructing a config by hand; the dtype
+        is part of the content key, so the same triples cached at both
+        precisions are two distinct entries.  Pass
         ``matrix_id`` to name the entry explicitly (e.g. a model/layer
         path); otherwise the content hash is the id.  Re-using an explicit
         id with *different* content replaces the entry (a miss) rather than
@@ -414,6 +420,8 @@ class MatrixRegistry:
         (submit → encode start) separately from encode wall-time.
         """
         cfg = config or self.default_config
+        if value_dtype is not None:
+            cfg = dataclasses.replace(cfg, value_dtype=value_dtype)
         spec = cpart.PlanSpec(partition, num_shards)
         ck = content_key(rows, cols, vals, shape, cfg, spec)
         key = matrix_id or ck

@@ -78,6 +78,25 @@ class SerpensOperator:
         return self.plan.nnz
 
     @property
+    def value_dtype(self) -> str:
+        """Precision of the streamed values ("float32" or "bfloat16");
+        accumulation and outputs are fp32 either way."""
+        return self.config.value_dtype
+
+    @property
+    def supports_fused_epilogue(self) -> bool:
+        """Whether :meth:`matvec_fused` can run on this operator.
+
+        The fused epilogue needs the *complete* accumulator resident at
+        the kernel's last grid step, so it requires a single-shard plan
+        (multi-shard needs a cross-shard combine first), no mesh, and no
+        aux spill side-stream (aux contributions land in a separate
+        epilogue, after which acc would change under the fused hook).
+        """
+        return (self.mesh is None and self.plan.num_shards == 1
+                and self.plan.n_aux == 0)
+
+    @property
     def device_bytes(self) -> int:
         """Bytes of the device buffers this operator holds resident (the
         streamed idx/val/seg arrays plus the aux spill triples) — what
@@ -142,9 +161,20 @@ class SerpensOperator:
                 f"{what} has shape {tuple(x.shape)}; matrix of shape "
                 f"{self.shape} needs leading dimension K={k}")
 
+    def _coerce(self, x, what: str):
+        """Boundary dtype policy: floating inputs cast to the fp32 compute
+        dtype exactly once, here — a float64 x must not silently promote
+        the whole compute, and integer/bool inputs are a caller bug."""
+        x = jnp.asarray(x)
+        if not jnp.issubdtype(x.dtype, jnp.floating):
+            raise TypeError(
+                f"{what} must have a floating dtype, got {x.dtype} "
+                f"(cast explicitly if an integer input is intentional)")
+        return x.astype(jnp.float32)
+
     def matvec(self, x, backend: str | None = None):
         """Raw A @ x (no epilogue)."""
-        x = jnp.asarray(x)
+        x = self._coerce(x, "x")
         if x.ndim != 1:
             raise ValueError(
                 f"matvec needs a 1-D x, got shape {tuple(x.shape)} "
@@ -158,11 +188,13 @@ class SerpensOperator:
         acc = self.matvec(x, backend=backend)
         if y is None:
             y = jnp.zeros((m,), jnp.float32)
-        return alpha * acc + beta * jnp.asarray(y, jnp.float32)
+        else:
+            y = self._coerce(y, "y")
+        return float(alpha) * acc + float(beta) * y
 
     def matmat(self, x_mat, alpha=1.0, beta=0.0, y=None, backend=None):
         """Multi-vector SpMM (Sextans-style baseline / batched serving)."""
-        x_mat = jnp.asarray(x_mat)
+        x_mat = self._coerce(x_mat, "x_mat")
         if x_mat.ndim != 2:
             raise ValueError(
                 f"matmat needs a (K, N) matrix, got shape "
@@ -171,7 +203,58 @@ class SerpensOperator:
         acc = self._apply(x_mat, backend or self.backend)
         if y is None:
             y = jnp.zeros_like(acc)
-        return alpha * acc + beta * jnp.asarray(y, jnp.float32)
+        else:
+            y = self._coerce(y, "y")
+        return float(alpha) * acc + float(beta) * y
+
+    # -- fused epilogue (solver hot path) ---------------------------------
+    def to_acc_layout(self, v):
+        """Flat length-M vector → the kernel's (R, LANES) accumulator
+        layout.  Lane-stationary rows put global row r at acc[r // LANES,
+        r % LANES], so flat↔acc is a pure pad + reshape — solver vectors
+        ride into the fused epilogue for free."""
+        lanes = self.config.lanes
+        rp = self.plan.out_rows_padded
+        v = jnp.asarray(v, jnp.float32)
+        return jnp.pad(v, (0, rp - v.shape[0])).reshape(-1, lanes)
+
+    def from_acc_layout(self, a):
+        """(R, LANES) accumulator layout → flat length-M vector."""
+        return a.reshape(-1)[: self.shape[0]]
+
+    def matvec_fused(self, x, epilogue, extras=(), backend=None):
+        """One-pass ``A @ x`` + fused epilogue (see
+        :func:`repro.kernels.ops.run_stream_fused`).
+
+        ``epilogue(acc2d, *extras)`` receives the (R, LANES) fp32
+        accumulator over *padded* rows (rows ≥ M are zero) and must
+        return a tuple of arrays.  Only available when
+        :attr:`supports_fused_epilogue`; callers (the solvers) fall back
+        to the unfused two-pass path otherwise.
+
+        Returns ``(acc_flat, outs)`` — ``acc_flat`` over padded rows
+        (slice ``[:M]`` or use :meth:`from_acc_layout` on 2-D results).
+        """
+        if not self.supports_fused_epilogue:
+            raise ValueError(
+                "fused epilogue needs a single-shard, mesh-free plan with "
+                "no aux spill (got "
+                f"shards={self.plan.num_shards}, mesh={self.mesh is not None}, "
+                f"n_aux={self.plan.n_aux})")
+        x = self._coerce(x, "x")
+        if x.ndim != 1:
+            raise ValueError("matvec_fused needs a 1-D x")
+        self._check_x(x, "x")
+        plan, cfg = self.plan, self.config
+        kp = plan.num_segments_local * cfg.segment_width
+        xp = jnp.pad(x, (0, kp - x.shape[0]))
+        idx, val, seg_t, seg_c = self._shards[0]
+        return ops.run_stream_fused(
+            idx, val, seg_t, seg_c, xp, epilogue=epilogue, extras=extras,
+            num_rows_padded=plan.out_rows_padded,
+            segment_width=cfg.segment_width,
+            tiles_per_chunk=cfg.tiles_per_chunk,
+            backend=backend or self.backend)
 
     def _shard_acc(self, dev, aux, xl, run):
         """One shard's accumulate + its aux-spill epilogue against local x."""

@@ -20,6 +20,23 @@ import jax.numpy as jnp
 from repro.core.format import ROW_BITS, COL_MASK, SerpensMatrix
 from repro.kernels import serpens_spmv
 
+# Trace-time dispatch counter: bumped once per run_stream/run_stream_fused
+# *call* (i.e. per stream pass emitted into a trace, not per executed
+# iteration — inside a lax.while_loop body it counts passes per body
+# trace).  Solvers use the delta across a body trace to verify the fused
+# path really issues ONE stream pass per iteration.
+_trace_dispatches = 0
+
+
+def trace_dispatch_count() -> int:
+    """Total run_stream/run_stream_fused dispatches emitted so far."""
+    return _trace_dispatches
+
+
+def _count_dispatch() -> None:
+    global _trace_dispatches
+    _trace_dispatches += 1
+
 
 def _decode(idx, seg_ids_tile, segment_width, lanes):
     """Decode the packed stream: global rows/cols + live mask."""
@@ -40,7 +57,8 @@ def spmv_stream_xla(idx, val, seg_ids_tile, x_flat, *, num_rows_padded,
     lanes = idx.shape[2]
     live, rows, cols = _decode(idx, seg_ids_tile, segment_width, lanes)
     xv = x_flat[cols.reshape(-1)].reshape(cols.shape)
-    contrib = jnp.where(live, val * xv, 0.0)
+    # bf16-load / fp32-accumulate: the upcast is exact, the MAC stays f32.
+    contrib = jnp.where(live, val.astype(jnp.float32) * xv, 0.0)
     acc = jnp.zeros((num_rows_padded,), jnp.float32)
     return acc.at[rows.reshape(-1)].add(contrib.reshape(-1))
 
@@ -54,7 +72,8 @@ def spmm_stream_xla(idx, val, seg_ids_tile, x_mat, *, num_rows_padded,
     n = x_mat.shape[1]
     live, rows, cols = _decode(idx, seg_ids_tile, segment_width, lanes)
     xv = x_mat[cols.reshape(-1)]                       # (T*S*L, N)
-    contrib = (jnp.where(live, val, 0.0).reshape(-1)[:, None] * xv)
+    contrib = (jnp.where(live, val.astype(jnp.float32), 0.0)
+               .reshape(-1)[:, None] * xv)
     acc = jnp.zeros((num_rows_padded, n), jnp.float32)
     return acc.at[rows.reshape(-1)].add(contrib)
 
@@ -84,6 +103,7 @@ def run_stream(idx, val, seg_ids_tile, seg_ids_chunk, x, *, num_rows_padded,
     per-shard loop, or a ``shard_map`` body — funnels through here, so all
     four (backend x arity) paths share one definition.
     """
+    _count_dispatch()
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "xla"
     if backend == "xla":
@@ -109,4 +129,46 @@ def run_stream(idx, val, seg_ids_tile, seg_ids_chunk, x, *, num_rows_padded,
             x.reshape(num_segments, segment_width, -1),
             num_rows_padded=num_rows_padded, segment_width=segment_width,
             tiles_per_chunk=tiles_per_chunk, interpret=interpret)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def run_stream_fused(idx, val, seg_ids_tile, seg_ids_chunk, x, *, epilogue,
+                     extras=(), num_rows_padded, segment_width,
+                     tiles_per_chunk=1, backend="auto", interpret=None):
+    """One-pass matvec **plus** a fused epilogue — the solver hot path.
+
+    ``epilogue(acc2d, *extras) -> tuple of arrays`` runs with the
+    (R, LANES) fp32 accumulator still on-chip: on the Pallas backend it is
+    traced into the kernel's last grid step
+    (:func:`~repro.kernels.serpens_spmv.spmv_fused_pallas`), so one HBM
+    pass per solver iteration does the matrix *and* the vector work; on
+    the XLA backend it is applied in the same trace immediately after the
+    stream scatter, where XLA fuses it with the accumulator while it is
+    still in registers/cache.  ``extras`` must be arrays of ≥2 dims
+    (scalars as (1, 1)); solver vectors travel in (R, LANES) accumulator
+    layout — a pure reshape of the flat vector for square matrices.
+
+    Returns ``(acc, outs)``: flat ``A @ x`` over padded rows, and the
+    epilogue outputs.  Counts as ONE stream dispatch
+    (:func:`trace_dispatch_count`).
+    """
+    _count_dispatch()
+    extras = tuple(extras)
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if backend == "xla":
+        acc = spmv_stream_xla(idx, val, seg_ids_tile, x,
+                              num_rows_padded=num_rows_padded,
+                              segment_width=segment_width)
+        lanes = idx.shape[2]
+        outs = epilogue(acc.reshape(-1, lanes), *extras)
+        return acc, tuple(outs)
+    if backend == "pallas":
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return serpens_spmv.spmv_fused_pallas(
+            idx, val, seg_ids_chunk, x.reshape(-1, segment_width), extras,
+            epilogue=epilogue, num_rows_padded=num_rows_padded,
+            segment_width=segment_width, tiles_per_chunk=tiles_per_chunk,
+            interpret=interpret)
     raise ValueError(f"unknown backend {backend!r}")

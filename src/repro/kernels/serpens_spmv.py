@@ -43,7 +43,9 @@ def _spmv_kernel(seg_ids_ref, idx_ref, val_ref, x_ref, out_ref):
         out_ref[...] = jnp.zeros_like(out_ref)
 
     idx = idx_ref[...]          # (TPC, SUB, LANES) int32 packed
-    vals = val_ref[...]         # (TPC, SUB, LANES) f32
+    # bf16-load / fp32-accumulate: the value stream may be bf16 (6 B/slot);
+    # upcast is exact, every multiply-accumulate below stays fp32.
+    vals = val_ref[...].astype(jnp.float32)
     live = idx != -1
     rows = jnp.where(live, (idx >> ROW_BITS) & COL_MASK, 0)
     cols = jnp.where(live, idx & COL_MASK, 0)
@@ -69,7 +71,8 @@ def spmv_pallas(idx, val, seg_ids, x2d, *, num_rows_padded, segment_width,
 
     Args:
       idx: int32 [num_tiles, SUB, LANES] packed stream indices.
-      val: float32 [num_tiles, SUB, LANES] stream values.
+      val: float32 or bfloat16 [num_tiles, SUB, LANES] stream values
+        (accumulation is fp32 either way).
       seg_ids: int32 [num_chunks] segment id per *chunk* (scalar prefetch).
       x2d: float32 [num_segments, W] segment-partitioned dense vector.
       num_rows_padded: R*LANES — accumulator size.
@@ -118,7 +121,7 @@ def _spmm_kernel(seg_ids_ref, idx_ref, val_ref, x_ref, out_ref):
         out_ref[...] = jnp.zeros_like(out_ref)
 
     idx = idx_ref[...]                   # (TPC, SUB, LANES)
-    vals = val_ref[...]
+    vals = val_ref[...].astype(jnp.float32)   # bf16-load / fp32-accumulate
     live = idx != -1
     rows = jnp.where(live, (idx >> ROW_BITS) & COL_MASK, 0)
     cols = jnp.where(live, idx & COL_MASK, 0)
@@ -168,3 +171,105 @@ def spmm_pallas(idx, val, seg_ids, x3d, *, num_rows_padded, segment_width,
         interpret=interpret,
     )(seg_ids, idx, val, x3d)
     return acc.reshape(num_rows_padded, n)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("epilogue", "num_rows_padded", "segment_width",
+                     "tiles_per_chunk", "interpret"))
+def spmv_fused_pallas(idx, val, seg_ids, x2d, extras=(), *, epilogue,
+                      num_rows_padded, segment_width, tiles_per_chunk=1,
+                      interpret=True):
+    """``A @ x`` with a fused epilogue in the kernel's output tile loop.
+
+    Identical streaming/accumulation to :func:`spmv_pallas`, but on the
+    *last* grid step — while the (R, LANES) accumulator is still resident
+    in VMEM — ``epilogue(acc, *extras)`` runs inside the kernel and its
+    results are written out alongside the accumulator.  This is how a
+    solver iteration's vector work (axpy/dot/normalize) shares the matrix
+    pass's single trip over HBM: the paper's CompY (α,β) unit generalized
+    to arbitrary per-iteration vector algebra.
+
+      * ``epilogue`` — a traceable pure fn ``(acc2d, *extras) -> tuple of
+        arrays``; ``acc2d`` is the (R, LANES) fp32 accumulator.  Must be
+        hashable (module-level function), it is a static jit arg.
+      * ``extras`` — tuple of arrays (each ≥2-D for TPU tiling; scalars
+        travel as (1, 1) arrays).  They are staged whole into VMEM —
+        solver vectors in (R, LANES) layout, which for square matrices is
+        a pure reshape of the flat vector (row r = rr * LANES + lane).
+
+    Returns ``(acc, outs)``: the flat accumulator and the epilogue's
+    outputs.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    num_tiles, sub, lanes = idx.shape
+    assert num_tiles % tiles_per_chunk == 0
+    num_chunks = num_tiles // tiles_per_chunk
+    assert seg_ids.shape == (num_chunks,), (seg_ids.shape, num_chunks)
+    r = num_rows_padded // lanes
+    w = segment_width
+    extras = tuple(extras)
+    n_extra = len(extras)
+    out_sds = jax.eval_shape(
+        epilogue, jax.ShapeDtypeStruct((r, lanes), jnp.float32),
+        *(jax.ShapeDtypeStruct(e.shape, e.dtype) for e in extras))
+    out_sds = tuple(out_sds)
+
+    def kernel(seg_ids_ref, idx_ref, val_ref, x_ref, *refs):
+        extra_refs = refs[:n_extra]
+        acc_ref = refs[n_extra]
+        out_refs = refs[n_extra + 1:]
+        c = pl.program_id(0)
+
+        @pl.when(c == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+            for o in out_refs:
+                o[...] = jnp.zeros_like(o)
+
+        idx_t = idx_ref[...]
+        vals = val_ref[...].astype(jnp.float32)
+        live = idx_t != -1
+        rows = jnp.where(live, (idx_t >> ROW_BITS) & COL_MASK, 0)
+        cols = jnp.where(live, idx_t & COL_MASK, 0)
+        xseg = x_ref[...][0]
+        xv = xseg[cols]
+        contrib = jnp.where(live, vals * xv, 0.0)
+        lanes_i = jax.lax.broadcasted_iota(jnp.int32, idx_t.shape, 2)
+        acc_ref[...] = acc_ref[...].at[
+            rows.reshape(-1), lanes_i.reshape(-1)].add(contrib.reshape(-1))
+
+        @pl.when(c == num_chunks - 1)
+        def _epilogue():
+            # The last chunk's accumulation above has already executed,
+            # so acc is the complete A @ x.
+            outs = epilogue(acc_ref[...],
+                            *(e[...] for e in extra_refs))
+            for o_ref, o in zip(out_refs, outs):
+                o_ref[...] = o.astype(o_ref.dtype)
+
+    def resident(shape):             # whole array staged, every grid step
+        return pl.BlockSpec(shape, lambda c, seg: (0,) * len(shape))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(num_chunks,),
+        in_specs=[
+            pl.BlockSpec((tiles_per_chunk, sub, lanes),
+                         lambda c, seg: (c, 0, 0)),
+            pl.BlockSpec((tiles_per_chunk, sub, lanes),
+                         lambda c, seg: (c, 0, 0)),
+            pl.BlockSpec((1, w), lambda c, seg: (seg[c], 0)),
+        ] + [resident(e.shape) for e in extras],
+        out_specs=[pl.BlockSpec((r, lanes), lambda c, seg: (0, 0))]
+        + [resident(s.shape) for s in out_sds],
+    )
+    res = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((r, lanes), jnp.float32)]
+        + list(out_sds),
+        interpret=interpret,
+    )(seg_ids, idx, val, x2d, *extras)
+    return res[0].reshape(-1), tuple(res[1:])

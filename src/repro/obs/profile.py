@@ -58,6 +58,10 @@ def plan_cost_report(op, *, measure: bool = False,
         "nnz": int(plan.nnz),
         "partition": plan.spec.partition,
         "num_shards": int(plan.num_shards),
+        # Slot width follows the plan's value dtype: 4 B packed index +
+        # 4 B fp32 value (the paper's 8 B element) or + 2 B bf16 value.
+        "value_dtype": plan.config.value_dtype,
+        "bytes_per_slot": 4 + plan.config.value_bytes,
         "stream_bytes": total_bytes,
         "bytes_per_nnz": total_bytes / max(int(plan.nnz), 1),
         "padded_slots": int(plan.idx.size),

@@ -1,8 +1,8 @@
 """SpMV serving: request micro-batcher over the matrix registry.
 
 The paper's cost model (Sec. 2.2) makes the serving strategy obvious: one
-SpMV streams all of A (8 B/nnz) to touch each x element once, so A-traffic
-dominates.  Sextans' multi-vector contrast — and this repo's ``matmat`` —
+SpMV streams all of A (8 B/nnz at fp32 values, 6 B/nnz at bf16) to touch
+each x element once, so A-traffic dominates.  Sextans' multi-vector contrast — and this repo's ``matmat`` —
 amortizes a single A-stream over N vectors, cutting stream-bytes/vector by
 N×.  ``SpMVService`` productizes that: callers submit independent
 ``(matrix_id, x, alpha, beta)`` requests; ``flush`` coalesces same-matrix
@@ -213,6 +213,13 @@ class SpMVService:
                 expect = self.registry.content(matrix_id)
             # Copy on enqueue: the caller may reuse/mutate its buffer before
             # flush (np.asarray would alias an already-float32 input).
+            # Boundary dtype policy (same as SerpensOperator): floating
+            # inputs cast to fp32 here, non-floating inputs are a bug.
+            x = np.asarray(x)
+            if not np.issubdtype(x.dtype, np.floating):
+                raise TypeError(
+                    f"x must have a floating dtype, got {x.dtype} (cast "
+                    f"explicitly if an integer input is intentional)")
             x = np.array(x, np.float32)
             if x.ndim != 1 or x.shape[0] != k_len:
                 raise ValueError(
@@ -221,6 +228,10 @@ class SpMVService:
             if beta != 0.0 and y is None:
                 raise ValueError("beta != 0 requires y")
             if y is not None:
+                if not np.issubdtype(np.asarray(y).dtype, np.floating):
+                    raise TypeError(
+                        f"y must have a floating dtype, got "
+                        f"{np.asarray(y).dtype}")
                 y = np.array(y, np.float32)
                 if y.shape != (m_len,):
                     raise ValueError(

@@ -1,9 +1,14 @@
 """Iterative solvers that run whole solves on-device over the Serpens
 operator (``jax.lax.while_loop`` — one compile, no host round-trips per
-iteration)."""
+iteration).  All solvers accept ``fused="auto"`` (in-kernel epilogues:
+one stream pass per iteration) and clamp tolerances to the operator's
+value-dtype precision floor (:mod:`repro.solvers.precision`)."""
 from repro.solvers.power_iteration import (PowerResult, pagerank,
                                            power_iteration)
 from repro.solvers.cg import CGResult, conjugate_gradient
+from repro.solvers.precision import (effective_tol, tolerance_floor,
+                                     value_eps)
 
 __all__ = ["PowerResult", "pagerank", "power_iteration",
-           "CGResult", "conjugate_gradient"]
+           "CGResult", "conjugate_gradient",
+           "effective_tol", "tolerance_floor", "value_eps"]
