@@ -72,6 +72,8 @@ def run(dry_run: bool = False, out_path: str = DEFAULT_OUT,
                      * (4 + plan.config.value_bytes)
                      + 12 * max(sm.n_aux for sm in plan.shards))
         modeled = base_bytes / max(per_shard, 1)
+        report = op.cost_report()
+        imbalance = report["lane_slot_imbalance"]
         row = {
             "shards": shards,
             "partition": partition,
@@ -80,13 +82,15 @@ def run(dry_run: bool = False, out_path: str = DEFAULT_OUT,
             "per_shard_stream_bytes": per_shard,
             "aux_entries": plan.n_aux,
             "padding_ratio": plan.padding_ratio,
+            "lane_slot_imbalance": imbalance,
             "modeled_speedup": modeled,
         }
         sweep.append(row)
         emit(f"channel_scaling/shards{shards:02d}", sec * 1e6,
              f"per_shard_bytes={per_shard}"
              f"|modeled_speedup={modeled:.2f}x"
-             f"|padding={plan.padding_ratio:.3f}")
+             f"|padding={plan.padding_ratio:.3f}"
+             f"|lane_imbalance={imbalance:.2f}")
 
     result = {
         "matrix": {"n": n, "nnz": nnz, "kind": "power_law",

@@ -324,6 +324,11 @@ class PreparedCOO:
     # there); row partitions rebuild them shard-locally.
     bucket_key: np.ndarray | None = None
     packed: np.ndarray | None = None
+    # Lazily-computed structural features (repro.core.features
+    # .MatrixFeatures) — the auto-tuner's input.  Cached here so
+    # repartitions of the same matrix never recount; merge_delta builds a
+    # fresh PreparedCOO, so a delta naturally invalidates the cache.
+    features: object = None
 
     @property
     def nnz(self) -> int:
@@ -531,15 +536,18 @@ def _key_arrays(rows, cols, shape, config: SerpensConfig):
     return bk, pk, rr32
 
 
-def prepare(rows, cols, vals, shape,
-            config: SerpensConfig = SerpensConfig()) -> PreparedCOO:
-    """Validate COO triples and run the global bucket sort once.
+def sort_order(rows, cols, shape, config: SerpensConfig):
+    """Stable (segment, lane, lane-local row) order of validated triples.
 
-    The (segment, lane, lane-local row) key is packed into the narrowest
-    integer numpy's radix sort handles fast — int32 covers every realistic
-    geometry; int64 is the fallback for enormous segment counts.
+    The sort step of :func:`prepare`, shared with the balanced
+    lane-assignment path (:mod:`repro.core.partition` re-sorts virtually
+    remapped rows without re-validating).  Returns ``(order, bucket_key,
+    packed)``; the cached key arrays are None outside the int32 fast path.
+
+    The key is packed into the narrowest integer numpy's radix sort
+    handles fast — int32 covers every realistic geometry; int64 is the
+    fallback for enormous segment counts.
     """
-    rows, cols, vals = _validate_coo(rows, cols, vals, shape, config)
     m, k = int(shape[0]), int(shape[1])
     w, lanes = config.segment_width, config.lanes
     row_span = -(-m // lanes)                  # lane-local rows per lane
@@ -552,10 +560,17 @@ def prepare(rows, cols, vals, shape,
         key = (seg * lanes + rows % lanes) * row_span + rows // lanes
     else:                                      # astronomically tall/wide
         seg = seg_of(cols, w)
-        return PreparedCOO(
-            shape=(m, k), config=config, rows=rows, cols=cols, vals=vals,
-            order=np.lexsort((rows // lanes, seg * lanes + rows % lanes)))
-    order = np.argsort(key, kind="stable")
+        return (np.lexsort((rows // lanes, seg * lanes + rows % lanes)),
+                None, None)
+    return np.argsort(key, kind="stable"), bk, pk
+
+
+def prepare(rows, cols, vals, shape,
+            config: SerpensConfig = SerpensConfig()) -> PreparedCOO:
+    """Validate COO triples and run the global bucket sort once."""
+    rows, cols, vals = _validate_coo(rows, cols, vals, shape, config)
+    m, k = int(shape[0]), int(shape[1])
+    order, bk, pk = sort_order(rows, cols, (m, k), config)
     return PreparedCOO(shape=(m, k), config=config,
                        rows=rows, cols=cols, vals=vals, order=order,
                        bucket_key=bk, packed=pk)

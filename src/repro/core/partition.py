@@ -35,14 +35,31 @@ import numpy as np
 from repro.core import format as sformat
 
 PARTITIONS = ("single", "row", "col")
+LANE_ASSIGNS = ("modulo", "balanced")
 
 
 @dataclasses.dataclass(frozen=True)
 class PlanSpec:
-    """Partition geometry: how a matrix splits into channel shards."""
+    """Partition geometry: how a matrix splits into channel shards.
+
+    ``lane_assign`` picks how rows map to accumulator lanes:
+
+      * ``"modulo"``   — the paper's split: row ``r`` is owned by lane
+        ``r % lanes``.  Zero bookkeeping, but on power-law matrices the
+        lane that drew a hot row sets every segment's schedule depth and
+        the other lanes pad up to it.
+      * ``"balanced"`` — maxE-style LPT assignment: rows are walked in
+        descending nnz and each chunk of ``lanes`` rows goes to the
+        currently lightest lanes, so heavy rows share lanes with light
+        ones and per-lane totals equalize.  The row→virtual-row
+        permutation is carried in the plan (``ChannelShardPlan.row_perm``)
+        and undone by one device gather at the end of every matvec, so
+        callers see the same output order either way.
+    """
 
     partition: str = "single"
     num_shards: int = 1
+    lane_assign: str = "modulo"
 
     def __post_init__(self):
         if self.partition not in PARTITIONS:
@@ -53,6 +70,10 @@ class PlanSpec:
             raise ValueError("num_shards must be >= 1")
         if self.partition == "single" and self.num_shards != 1:
             raise ValueError("'single' plans have exactly one shard")
+        if self.lane_assign not in LANE_ASSIGNS:
+            raise ValueError(
+                f"lane_assign must be one of {LANE_ASSIGNS}, got "
+                f"{self.lane_assign!r}")
 
 
 @dataclasses.dataclass
@@ -80,6 +101,11 @@ class ChannelShardPlan:
     aux_rows: np.ndarray            # int32 [N, A] (A = max aux len, 0-padded)
     aux_cols: np.ndarray            # int32 [N, A]
     aux_vals: np.ndarray            # float32 [N, A]
+    # lane_assign="balanced" only: global row r was encoded as virtual row
+    # row_perm[r] (injective into the padded accumulator span; block-local
+    # for row partitions so the shard of a row is unchanged).  The
+    # executor's final gather ``acc[row_perm]`` restores caller row order.
+    row_perm: np.ndarray | None = None
 
     @property
     def num_shards(self) -> int:
@@ -112,6 +138,14 @@ class ChannelShardPlan:
         kept = self.nnz - self.n_aux
         return float(total - kept) / max(total, 1)
 
+    @property
+    def virtual_rows(self) -> int:
+        """Extent of the (virtual) row space the streams were encoded in."""
+        if self.spec.partition == "row":
+            return self.num_shards * self.block_m
+        lanes = self.config.lanes
+        return -(-int(self.shape[0]) // lanes) * lanes
+
     def to_coo(self):
         """Recover global COO triples from all shards (order deterministic)."""
         rs, cs, vs = [], [], []
@@ -124,7 +158,14 @@ class ChannelShardPlan:
             rs.append(r)
             cs.append(c)
             vs.append(v)
-        return (np.concatenate(rs), np.concatenate(cs), np.concatenate(vs))
+        r = np.concatenate(rs)
+        if self.row_perm is not None:
+            # Decoded rows are virtual; invert the balanced permutation.
+            inv = np.full(self.virtual_rows, -1, np.int64)
+            inv[self.row_perm] = np.arange(int(self.shape[0]),
+                                           dtype=np.int64)
+            r = inv[r]
+        return (r, np.concatenate(cs), np.concatenate(vs))
 
 
 def _pad_stack(mats: list[sformat.SerpensMatrix]):
@@ -201,7 +242,8 @@ def spec_geometry(shape, config: sformat.SerpensConfig,
 
 def finish_plan(shards: list[sformat.SerpensMatrix], shape,
                 config: sformat.SerpensConfig, spec: PlanSpec,
-                block_m: int, block_k: int) -> ChannelShardPlan:
+                block_m: int, block_k: int,
+                row_perm: np.ndarray | None = None) -> ChannelShardPlan:
     """Stack per-shard streams into a :class:`ChannelShardPlan` (the shared
     tail of the serial and parallel encode paths)."""
     # All shards must agree on segment count for a uniform x reshape.
@@ -215,7 +257,61 @@ def finish_plan(shards: list[sformat.SerpensMatrix], shape,
         shards=shards, block_m=block_m, block_k=block_k,
         num_segments_local=num_segments,
         idx=idx, val=val, seg_ids=seg_ids,
-        aux_rows=aux_r, aux_cols=aux_c, aux_vals=aux_v)
+        aux_rows=aux_r, aux_cols=aux_c, aux_vals=aux_v,
+        row_perm=row_perm)
+
+
+def balanced_virtual_rows(row_nnz: np.ndarray, lanes: int) -> np.ndarray:
+    """LPT lane assignment: row index → virtual row, per block.
+
+    The maxE-SpMV idea specialized to lane-stationary accumulators: walk
+    rows in descending nnz; each chunk of ``lanes`` rows goes to the
+    currently lightest lanes (heaviest row → lightest lane), so per-lane
+    nnz totals equalize instead of following the luck of ``r % lanes``.
+    A row's virtual id is ``fill[lane] * lanes + lane``, which keeps every
+    lane at most ``ceil(n / lanes)`` rows deep — the same accumulator
+    span as the modulo split, so only the *membership* changes, not the
+    stream geometry.  Deterministic (stable sorts, ties on row index) and
+    injective into ``[0, ceil(n / lanes) * lanes)``.
+
+    O(ceil(n / lanes)) small numpy passes — a few ms per million rows,
+    negligible next to the encode's global sort.
+    """
+    n = int(row_nnz.size)
+    virt = np.empty(n, np.int64)
+    if n == 0:
+        return virt
+    order = np.argsort(-np.asarray(row_nnz, np.int64), kind="stable")
+    loads = np.zeros(lanes, np.int64)
+    fill = np.zeros(lanes, np.int64)
+    for s in range(0, n, lanes):
+        chunk = order[s:s + lanes]
+        lane = np.argsort(loads, kind="stable")[:chunk.size]
+        virt[chunk] = fill[lane] * lanes + lane
+        loads[lane] += row_nnz[chunk]
+        fill[lane] += 1
+    return virt
+
+
+def balanced_row_perm(prep: sformat.PreparedCOO, spec: PlanSpec,
+                      block_m: int) -> np.ndarray:
+    """Global row → virtual row for ``lane_assign="balanced"``.
+
+    Row partitions permute block-locally (virtual rows stay inside their
+    shard's ``[d * block_m, (d+1) * block_m)`` window, so ``shard =
+    vrow // block_m`` still holds); col/single plans permute globally.
+    """
+    m, _ = prep.shape
+    lanes = prep.config.lanes
+    counts = (np.bincount(prep.rows, minlength=m) if prep.nnz
+              else np.zeros(m, np.int64))
+    if spec.partition != "row":
+        return balanced_virtual_rows(counts, lanes)
+    perm = np.empty(m, np.int64)
+    for lo in range(0, m, block_m):
+        hi = min(lo + block_m, m)
+        perm[lo:hi] = lo + balanced_virtual_rows(counts[lo:hi], lanes)
+    return perm
 
 
 def plan_from_prepared(prep: sformat.PreparedCOO,
@@ -236,7 +332,7 @@ def plan_from_prepared(prep: sformat.PreparedCOO,
     optionally reuses a persistent
     :class:`~repro.core.parallel_encode.EncodePool`.
     """
-    if n_workers > 1 and prep.nnz > 0:
+    if n_workers > 1 and prep.nnz > 0 and spec.lane_assign == "modulo":
         from repro.core import parallel_encode as penc
         return penc.plan_from_prepared_parallel(
             prep, spec, n_workers=n_workers, pool=pool)
@@ -246,6 +342,8 @@ def plan_from_prepared(prep: sformat.PreparedCOO,
     rows, cols, vals = prep.rows, prep.cols, prep.vals
 
     block_m, block_k = spec_geometry((m, k), cfg, spec)
+    if spec.lane_assign == "balanced":
+        return _plan_balanced(prep, spec, block_m, block_k)
     if spec.partition == "row":
         # Contiguous row blocks, locally re-indexed (lane-aligned: the lane
         # of a row is invariant under the shard offset).
@@ -266,6 +364,52 @@ def plan_from_prepared(prep: sformat.PreparedCOO,
     else:  # single
         shards = [sformat.encode_prepared(prep)]
     return finish_plan(shards, (m, k), cfg, spec, block_m, block_k)
+
+
+def _plan_balanced(prep: sformat.PreparedCOO, spec: PlanSpec,
+                   block_m: int, block_k: int) -> ChannelShardPlan:
+    """``lane_assign="balanced"`` encode path of :func:`plan_from_prepared`.
+
+    Remaps rows through the LPT permutation, re-runs the (segment, lane,
+    lane-local row) bucket sort on *virtual* rows, and encodes with the
+    same shared one-pass machinery as the modulo path.  Costs one extra
+    O(nnz log nnz) sort versus modulo (the prepared sort is keyed on real
+    rows and cannot be reused), which the tuner only pays where the
+    padding win justifies it.
+    """
+    cfg = prep.config
+    m, k = prep.shape
+    n = spec.num_shards
+    lanes = cfg.lanes
+    cols, vals = prep.cols, prep.vals
+    row_perm = balanced_row_perm(prep, spec, block_m)
+    vrows = row_perm[prep.rows]
+    if spec.partition == "row":
+        # Virtual rows stay block-local, so shard derivation and the
+        # lane-alignment argument are identical to the modulo path.
+        shard = vrows // block_m
+        order0, _, _ = sformat.sort_order(vrows, cols, (n * block_m, k), cfg)
+        order = order0[np.argsort(shard[order0], kind="stable")]
+        shards = sformat._encode_stream(
+            order, shard, vrows - shard * block_m, cols, vals,
+            n, (block_m, k), cfg)
+    else:
+        m_v = -(-m // lanes) * lanes
+        order0, bk, pk = sformat.sort_order(vrows, cols, (m_v, k), cfg)
+        if spec.partition == "col":
+            # Shard key is a prefix of the segment key, so the fresh
+            # virtual-row sort is already shard-grouped (as in modulo).
+            shard = cols // block_k
+            shards = sformat._encode_stream(
+                order0, shard, vrows, cols - shard * block_k, vals,
+                n, (m_v, block_k), cfg, bk_a=bk, pk_a=pk)
+        else:  # single
+            shard = np.zeros(vrows.size, np.int64)
+            shards = sformat._encode_stream(
+                order0, shard, vrows, cols, vals, 1, (m_v, k), cfg,
+                bk_a=bk, pk_a=pk)
+    return finish_plan(shards, (m, k), cfg, spec, block_m, block_k,
+                       row_perm=row_perm)
 
 
 def plan_apply_delta(
@@ -295,6 +439,11 @@ def plan_apply_delta(
     """
     cfg, spec = plan.config, plan.spec
     m, k = plan.shape
+    if plan.row_perm is not None:
+        raise ValueError(
+            "plan_apply_delta does not support lane_assign='balanced' "
+            "plans: the LPT lane assignment depends on per-row nnz, which "
+            "a delta changes — re-encode via plan_from_prepared")
     if merge is None:
         if prep is None:
             raise ValueError("plan_apply_delta needs the plan's PreparedCOO")

@@ -37,15 +37,20 @@ from repro.core.spmv import SerpensOperator
 
 
 def content_key(rows, cols, vals, shape, config: sformat.SerpensConfig,
-                spec: cpart.PlanSpec = cpart.PlanSpec()) -> str:
+                spec: cpart.PlanSpec | str = cpart.PlanSpec()) -> str:
     """Deterministic id for (COO triples, shape, geometry, partition).
 
     Element *order* is part of the key: duplicates are legal in COO and the
     stream layout depends on input order, so two orderings are two streams.
+    ``spec="auto"`` keys the *request* ("tuner's choice"), not whatever
+    geometry the tuner picks — a repeat auto put is a hit even after an
+    online retune swapped the underlying plan.
     """
     h = hashlib.sha256()
+    spec_id = ("auto",) if spec == "auto" else (
+        spec.partition, spec.num_shards, spec.lane_assign)
     h.update(repr((tuple(int(s) for s in shape), config,
-                   (spec.partition, spec.num_shards))).encode())
+                   spec_id)).encode())
     for arr, dt in ((rows, np.int64), (cols, np.int64), (vals, np.float32)):
         a = np.ascontiguousarray(np.asarray(arr, dtype=dt))
         h.update(a.tobytes())
@@ -62,12 +67,15 @@ def stream_key(plan: cpart.ChannelShardPlan) -> str:
     """
     h = hashlib.sha256()
     h.update(repr((tuple(int(x) for x in plan.shape), plan.config,
-                   (plan.spec.partition, plan.spec.num_shards))).encode())
+                   (plan.spec.partition, plan.spec.num_shards,
+                    plan.spec.lane_assign))).encode())
     for a in (plan.idx, plan.val, plan.seg_ids):
         h.update(np.ascontiguousarray(a).tobytes())
     if plan.n_aux:
         for a in (plan.aux_rows, plan.aux_cols, plan.aux_vals):
             h.update(np.ascontiguousarray(a).tobytes())
+    if plan.row_perm is not None:
+        h.update(np.ascontiguousarray(plan.row_perm).tobytes())
     return "s" + h.hexdigest()[:15]
 
 
@@ -139,6 +147,11 @@ class _Entry:
     delta_encodes: int = 0          # incremental updates applied
     delta_seconds: float = 0.0      # wall-time of those incremental encodes
     delta_slots: int = 0            # stream slots respliced by them
+    # spec="auto" entries: the TuneDecision behind the current plan, and
+    # the caller's un-overridden config so a retune re-applies the next
+    # candidate's overrides from the same base.  None for manual entries.
+    tune: object = None
+    base_config: object = None
 
     @property
     def stream_bytes(self) -> int:
@@ -215,12 +228,17 @@ class MatrixRegistry:
                  backend: str = "auto", *, n_workers: int = 1,
                  encode_pool: penc.EncodePool | None = None,
                  min_parallel_nnz: int = 1 << 21,
-                 background_threads: int = 2):
+                 background_threads: int = 2,
+                 tuner=None):
         if byte_budget <= 0:
             raise ValueError("byte_budget must be positive")
         self.byte_budget = int(byte_budget)
         self.default_config = config
         self.default_backend = backend
+        # Auto-tuning (put(spec="auto")): shared PlanTuner, lazily created
+        # on first use when not injected (e.g. preloaded with the shipped
+        # prior from results/autotune_sweep.json).
+        self.tuner = tuner
         # Parallel encode: matrices with >= min_parallel_nnz non-zeros
         # encode range-sharded over n_workers processes (below that the
         # in-process pipeline wins — see README "Parallel encode").
@@ -306,7 +324,14 @@ class MatrixRegistry:
                           "version": e.version,
                           "delta_encodes": e.delta_encodes,
                           "delta_seconds": e.delta_seconds,
-                          "delta_slots_per_s": e.delta_slots_per_s}
+                          "delta_slots_per_s": e.delta_slots_per_s,
+                          "spec": (f"{e.primary.partition}:"
+                                   f"{e.primary.num_shards}:"
+                                   f"{e.primary.lane_assign}"),
+                          "backend": e.backend,
+                          "auto_tuned": e.tune is not None,
+                          "tune": (None if e.tune is None
+                                   else e.tune.to_dict())}
                     for key, e in self._entries.items()}
 
     def version(self, matrix_id: str) -> int:
@@ -348,29 +373,67 @@ class MatrixRegistry:
         if pool is not None:
             pool.close()
 
+    def get_tuner(self):
+        """The shared :class:`~repro.core.autotune.PlanTuner` (created on
+        first use when none was injected at construction)."""
+        with self._lock:
+            if self.tuner is None:
+                from repro.core.autotune import PlanTuner
+                be = self.default_backend
+                self.tuner = PlanTuner(backend=None if be == "auto" else be)
+            return self.tuner
+
     def _encode_plan(self, rows, cols, vals, shape, cfg, spec, be):
         """prepare + encode + bind (the pure, slow part; no lock held).
 
         Large matrices fan out over the process pool
         (:func:`repro.core.parallel_encode.prepare_and_plan` — bit-identical
-        to the serial encode); returns (prep, plan, op, seconds, slots).
+        to the serial encode); returns ``(prep, plan, op, seconds, slots,
+        spec, backend, tune)`` with spec/backend concrete.
+
+        ``spec="auto"`` consults the tuner: features come out of the
+        prepared sort for near-free, the chosen candidate's config
+        overrides are grafted onto the prepared arrays (the bucket sort
+        only depends on segment/lane geometry, which candidates never
+        change), and the entry remembers the decision so dispatch
+        observations feed back into the tuner.
         """
         t0 = time.perf_counter()
-        nw = (self.n_workers
-              if np.asarray(rows).size >= self.min_parallel_nnz else 1)
-        with obs.span("encode", cat="registry",
-                      nnz=int(np.asarray(rows).size), workers=nw) as sp:
-            prep, plan = penc.prepare_and_plan(
-                rows, cols, vals, shape, cfg, spec, n_workers=nw,
-                pool=self._encode_pool() if nw > 1 else None)
-            sp.args["slots"] = int(plan.idx.size)
+        nnz = int(np.asarray(rows).size)
+        nw = self.n_workers if nnz >= self.min_parallel_nnz else 1
+        tune = None
+        if spec == "auto":
+            from repro.core.features import features_of
+            with obs.span("tune", cat="registry", nnz=nnz) as sp:
+                prep = sformat.prepare(rows, cols, vals, shape, cfg)
+                tune = self.get_tuner().choose(features_of(prep))
+                cand = tune.candidate
+                cfg2 = cand.apply_config(cfg)
+                if cfg2 != cfg:
+                    prep = dataclasses.replace(prep, config=cfg2)
+                spec, be = cand.spec, cand.backend
+                sp.args["choice"] = cand.key
+            with obs.span("encode", cat="registry", nnz=nnz,
+                          workers=nw) as sp:
+                plan = cpart.plan_from_prepared(
+                    prep, spec, n_workers=nw,
+                    pool=self._encode_pool() if nw > 1 else None)
+                sp.args["slots"] = int(plan.idx.size)
+        else:
+            with obs.span("encode", cat="registry", nnz=nnz,
+                          workers=nw) as sp:
+                prep, plan = penc.prepare_and_plan(
+                    rows, cols, vals, shape, cfg, spec, n_workers=nw,
+                    pool=self._encode_pool() if nw > 1 else None)
+                sp.args["slots"] = int(plan.idx.size)
         with obs.span("bind", cat="registry"):
             op = SerpensOperator(plan, backend=be)
         dt = time.perf_counter() - t0
-        return prep, plan, op, dt, int(plan.idx.size)
+        return prep, plan, op, dt, int(plan.idx.size), spec, be, tune
 
     def _install(self, key, ck, spec, be, prep, plan, op, dt, slots,
-                 queue_wait: float = 0.0) -> str:
+                 queue_wait: float = 0.0, tune=None,
+                 base_config=None) -> str:
         """Book-keep one finished encode (caller does NOT hold the lock)."""
         with self._lock:
             self.stats.encode_seconds += dt
@@ -391,18 +454,25 @@ class MatrixRegistry:
                                      ops={(spec, None, None): op},
                                      prepared=prep, encode_seconds=dt,
                                      encode_slots=slots,
-                                     queue_seconds=queue_wait))
+                                     queue_seconds=queue_wait,
+                                     tune=tune, base_config=base_config))
         return key
 
     def put(self, rows, cols, vals, shape, *, config=None, backend=None,
             matrix_id: str | None = None, partition: str = "single",
-            num_shards: int = 1, value_dtype: str | None = None,
+            num_shards: int = 1, lane_assign: str = "modulo",
+            spec=None, value_dtype: str | None = None,
             blocking: bool = True) -> str:
         """Ensure the matrix's plan is cached; return its id.
 
         A repeat ``put`` of the same content + geometry is a *hit*: the
-        encode does not re-run.  ``partition``/``num_shards`` choose the
-        channel-shard geometry (part of the content key).  ``value_dtype``
+        encode does not re-run.  ``partition``/``num_shards``/
+        ``lane_assign`` choose the channel-shard geometry (part of the
+        content key); ``spec`` overrides all three with an explicit
+        :class:`~repro.core.partition.PlanSpec` — or the string
+        ``"auto"``, which hands the choice of (spec, backend, config
+        overrides) to the shared :class:`~repro.core.autotune.PlanTuner`
+        based on the matrix's structural features.  ``value_dtype``
         overrides the config's value-stream dtype (``"float32"`` /
         ``"bfloat16"``) without constructing a config by hand; the dtype
         is part of the content key, so the same triples cached at both
@@ -422,7 +492,11 @@ class MatrixRegistry:
         cfg = config or self.default_config
         if value_dtype is not None:
             cfg = dataclasses.replace(cfg, value_dtype=value_dtype)
-        spec = cpart.PlanSpec(partition, num_shards)
+        if spec is None:
+            spec = cpart.PlanSpec(partition, num_shards, lane_assign)
+        elif spec != "auto" and not isinstance(spec, cpart.PlanSpec):
+            raise TypeError(f"spec must be a PlanSpec or 'auto', "
+                            f"got {spec!r}")
         ck = content_key(rows, cols, vals, shape, cfg, spec)
         key = matrix_id or ck
         be = backend or self.default_backend
@@ -471,9 +545,11 @@ class MatrixRegistry:
             # The twin was cancelled (evict/clear mid-encode) — a blocking
             # put still promises a cached entry, so encode it ourselves.
         # Encode outside the lock — it is the slow part and pure.
-        prep, plan, op, dt, slots = self._encode_plan(
+        prep, plan, op, dt, slots, spec2, be2, tune = self._encode_plan(
             rows, cols, vals, shape, cfg, spec, be)
-        return self._install(key, ck, spec, be, prep, plan, op, dt, slots)
+        return self._install(key, ck, spec2, be2, prep, plan, op, dt, slots,
+                             tune=tune,
+                             base_config=cfg if tune is not None else None)
 
     def _background_encode(self, key, pending: _PendingEncode, args, cfg,
                            spec, be, trace_ctx: dict | None = None) -> None:
@@ -489,8 +565,8 @@ class MatrixRegistry:
             obs.event("encode-queue-wait", queue_wait, cat="registry")
             try:
                 rows, cols, vals, shape = args
-                prep, plan, op, dt, slots = self._encode_plan(
-                    rows, cols, vals, shape, cfg, spec, be)
+                prep, plan, op, dt, slots, spec2, be2, tune = \
+                    self._encode_plan(rows, cols, vals, shape, cfg, spec, be)
             except BaseException as e:      # surfaced by ready()/get()
                 obs.instant("encode-failed", cat="registry", error=str(e))
                 with self._lock:
@@ -510,8 +586,10 @@ class MatrixRegistry:
                 # Install BEFORE clearing the pending record: ready()/get()
                 # always see pending-or-entry, never a gap a concurrent
                 # flush would misread as "unknown matrix".
-                self._install(key, pending.content, spec, be, prep, plan,
-                              op, dt, slots, queue_wait=queue_wait)
+                self._install(key, pending.content, spec2, be2, prep, plan,
+                              op, dt, slots, queue_wait=queue_wait,
+                              tune=tune,
+                              base_config=cfg if tune is not None else None)
                 with self._lock:
                     self.stats.background_puts += 1
                     if self._pending.get(key) is pending:
@@ -659,9 +737,19 @@ class MatrixRegistry:
                     new_prep = merge.prepared
                     new_plans, slots = {}, 0
                     for spec, plan in plans.items():
-                        new_plans[spec], merge, s = cpart.plan_apply_delta(
-                            plan, prep, merge=merge)
-                        slots += s
+                        if plan.row_perm is not None:
+                            # Balanced lanes: the LPT assignment depends on
+                            # per-row nnz, which the delta changed — cold
+                            # re-encode from the merged sort (still skips
+                            # re-validate + global re-sort).
+                            new_plans[spec] = cpart.plan_from_prepared(
+                                merge.prepared, spec)
+                            slots += int(new_plans[spec].idx.size)
+                        else:
+                            new_plans[spec], merge, s = \
+                                cpart.plan_apply_delta(plan, prep,
+                                                       merge=merge)
+                            slots += s
                 else:
                     # Degraded path: prepared dropped (byte pressure) or
                     # never known (adopted operator) — decode and
@@ -700,6 +788,97 @@ class MatrixRegistry:
                 self._entries.move_to_end(matrix_id)
                 self._evict_over_budget(keep=matrix_id)
             return matrix_id
+
+    # -- auto-tuning feedback ---------------------------------------------
+    def tune_decision(self, matrix_id: str):
+        """The :class:`~repro.core.autotune.TuneDecision` behind an
+        auto-tuned entry's current plan, or None for manual entries."""
+        with self._lock:
+            entry = self._entries.get(matrix_id)
+            return None if entry is None else entry.tune
+
+    def record_observation(self, matrix_id: str, *, slots_per_s: float,
+                           requests_per_s: float | None = None) -> bool:
+        """Feed one measured dispatch back into the tuner.
+
+        Called by the service (and benchmarks) after a dispatch against an
+        auto-tuned matrix; no-op (False) for manual entries.
+        """
+        with self._lock:
+            entry = self._entries.get(matrix_id)
+            tune = None if entry is None else entry.tune
+            tuner = self.tuner
+        if tune is None or tuner is None:
+            return False
+        tuner.observe(tune.bucket, tune.candidate, slots_per_s,
+                      requests_per_s=requests_per_s,
+                      predicted=tune.predicted)
+        return True
+
+    def retune(self, matrix_id: str) -> bool:
+        """Re-consult the tuner for an auto-tuned entry; swap its plan if
+        the ranking changed under it.
+
+        Cheap when the choice is stable (one lock-free ranked lookup, no
+        encode).  On a swap the entry is re-encoded from its resident
+        prepared sort with the new candidate's config overrides and its
+        cached bindings are invalidated — the next ``get`` serves the new
+        plan.  Returns True iff the plan was swapped.  Entries whose
+        prepared arrays were shed under byte pressure (or manual entries)
+        are left alone.
+        """
+        with self._lock:
+            entry = self._entries.get(matrix_id)
+            if entry is None or entry.tune is None or entry.prepared is None:
+                return False
+            tuner = self.tuner
+            if tuner is None:
+                return False
+            prep = entry.prepared
+            content = entry.content
+            old = entry.tune
+            base_cfg = entry.base_config or prep.config
+        from repro.core.features import features_of
+        decision = tuner.choose(features_of(prep), explore=False)
+        if decision.candidate.key == old.candidate.key:
+            with self._lock:
+                entry = self._entries.get(matrix_id)
+                if entry is not None and entry.content == content:
+                    entry.tune = decision  # refresh the predicted score
+            return False
+        cand = decision.candidate
+        cfg2 = cand.apply_config(base_cfg)
+        prep2 = (prep if cfg2 == prep.config
+                 else dataclasses.replace(prep, config=cfg2))
+        t0 = time.perf_counter()
+        with obs.span("retune", cat="registry", matrix=matrix_id,
+                      choice=cand.key, was=old.candidate.key):
+            plan = cpart.plan_from_prepared(prep2, cand.spec)
+            op = SerpensOperator(plan, backend=cand.backend)
+        dt = time.perf_counter() - t0
+        slots = int(plan.idx.size)
+        with self._lock:
+            entry = self._entries.get(matrix_id)
+            if entry is None or entry.content != content:
+                return False   # evicted/updated mid-encode: drop the work
+            old_total = entry.total_bytes
+            entry.plans = {cand.spec: plan}
+            entry.ops.clear()
+            entry.ops[(cand.spec, None, None)] = op
+            entry.prepared = prep2
+            entry.primary = cand.spec
+            entry.backend = cand.backend
+            entry.tune = decision
+            entry.encode_seconds += dt
+            entry.encode_slots += slots
+            self.stats.encodes += 1
+            self.stats.encode_seconds += dt
+            self.stats.encode_slots += slots
+            self._bytes += entry.total_bytes - old_total
+            self._entries.move_to_end(matrix_id)
+            self._evict_over_budget(keep=matrix_id)
+        tuner.record_retune(decision.bucket)
+        return True
 
     def get(self, matrix_id: str, *, mesh=None, axis: str | None = None,
             partition: str | None = None, block: bool = True,
@@ -759,7 +938,8 @@ class MatrixRegistry:
                 part = partition or (
                     entry.primary.partition
                     if entry.primary.partition != "single" else "row")
-                spec = cpart.PlanSpec(part, mesh.shape[axis])
+                spec = cpart.PlanSpec(part, mesh.shape[axis],
+                                      entry.primary.lane_assign)
                 plan = self._find_plan(entry, spec)
             if plan is not None:
                 op = entry.ops.get((spec, mesh, axis))

@@ -42,9 +42,17 @@ class SerpensOperator:
         self.plan = plan
         self.config = plan.config
         self.shape = tuple(plan.shape)
-        self.backend = backend
+        # Resolve "auto" exactly once at bind time: a per-call
+        # jax.default_backend() lookup inside jit traces is both overhead
+        # and a tracing hazard.  "auto" stays accepted at the API edge
+        # (run_stream resolves it for direct callers).
+        self.backend = ops.resolve_backend(backend)
         self.mesh = mesh
         self.axis = axis
+        # lane_assign="balanced" plans encode row r at virtual row
+        # row_perm[r]; the final gather restores caller row order.
+        self._row_perm = (None if plan.row_perm is None
+                          else jnp.asarray(plan.row_perm))
         cfg = plan.config
         if mesh is not None:
             n = mesh.shape[axis]
@@ -70,6 +78,8 @@ class SerpensOperator:
                  *self._aux] if mesh is not None else
                 [a for dev in self._shards for a in dev]
                 + [a for aux in self._auxs if aux is not None for a in aux])
+        if self._row_perm is not None:
+            held = held + [self._row_perm]
         self._device_bytes = int(sum(int(a.nbytes) for a in held))
 
     # -- properties -------------------------------------------------------
@@ -89,12 +99,14 @@ class SerpensOperator:
 
         The fused epilogue needs the *complete* accumulator resident at
         the kernel's last grid step, so it requires a single-shard plan
-        (multi-shard needs a cross-shard combine first), no mesh, and no
+        (multi-shard needs a cross-shard combine first), no mesh, no
         aux spill side-stream (aux contributions land in a separate
-        epilogue, after which acc would change under the fused hook).
+        epilogue, after which acc would change under the fused hook), and
+        no balanced-lane row permutation (the epilogue sees the virtual
+        row order, not the caller's).
         """
         return (self.mesh is None and self.plan.num_shards == 1
-                and self.plan.n_aux == 0)
+                and self.plan.n_aux == 0 and self.plan.row_perm is None)
 
     @property
     def device_bytes(self) -> int:
@@ -148,8 +160,9 @@ class SerpensOperator:
         # Any 1-shard plan already is the 1-device stream — no re-encode.
         if plan.num_shards != n or (n > 1 and plan.spec.partition != want):
             r, c, v = plan.to_coo()
-            plan = cpart.make_plan(r, c, v, self.shape, self.config,
-                                   cpart.PlanSpec(want, n))
+            plan = cpart.make_plan(
+                r, c, v, self.shape, self.config,
+                cpart.PlanSpec(want, n, plan.spec.lane_assign))
         return SerpensOperator(plan, mesh=mesh, axis=axis,
                                backend=self.backend)
 
@@ -238,9 +251,10 @@ class SerpensOperator:
         if not self.supports_fused_epilogue:
             raise ValueError(
                 "fused epilogue needs a single-shard, mesh-free plan with "
-                "no aux spill (got "
+                "no aux spill and modulo lane assignment (got "
                 f"shards={self.plan.num_shards}, mesh={self.mesh is not None}, "
-                f"n_aux={self.plan.n_aux})")
+                f"n_aux={self.plan.n_aux}, "
+                f"lane_assign={self.plan.spec.lane_assign!r})")
         x = self._coerce(x, "x")
         if x.ndim != 1:
             raise ValueError("matvec_fused needs a 1-D x")
@@ -256,6 +270,17 @@ class SerpensOperator:
             tiles_per_chunk=cfg.tiles_per_chunk,
             backend=backend or self.backend)
 
+    def _finish(self, acc):
+        """Virtual accumulator → caller row order (leading axis).
+
+        Modulo plans just drop the padding tail; balanced plans gather
+        through the LPT permutation — one device gather in place of the
+        slice, the entire runtime cost of ``lane_assign="balanced"``.
+        """
+        if self._row_perm is not None:
+            return acc[self._row_perm]
+        return acc[: self.shape[0]]
+
     def _shard_acc(self, dev, aux, xl, run):
         """One shard's accumulate + its aux-spill epilogue against local x."""
         idx, val, seg_t, seg_c = dev
@@ -267,9 +292,8 @@ class SerpensOperator:
         return acc
 
     def _apply(self, x, backend):
-        """Raw A @ x over the plan (x: 1-D or (K, N)); returns [:m]."""
+        """Raw A @ x over the plan (x: 1-D or (K, N)) in caller row order."""
         plan, cfg = self.plan, self.config
-        m, _ = self.shape
         kp = plan.num_segments_local * cfg.segment_width
         x = x.astype(jnp.float32)
         run = functools.partial(
@@ -287,19 +311,19 @@ class SerpensOperator:
                 part = self._shard_acc(dev, aux, xp[d * kp:(d + 1) * kp],
                                        run)
                 acc = part if acc is None else acc + part
-            return acc[:m]
+            return self._finish(acc)
         pad[0] = (0, kp - x.shape[0])
         xp = jnp.pad(x, pad)
         outs = [self._shard_acc(dev, aux, xp, run)
                 for dev, aux in zip(self._shards, self._auxs)]
         if plan.num_shards == 1:
-            return outs[0][:m]
-        return jnp.concatenate([o[:plan.block_m] for o in outs])[:m]
+            return self._finish(outs[0])
+        return self._finish(
+            jnp.concatenate([o[:plan.block_m] for o in outs]))
 
     def _apply_sharded(self, x, run):
         """shard_map execution over the mesh axis (row concat / col psum)."""
         plan, axis = self.plan, self.axis
-        m, _ = self.shape
         n = plan.num_shards
         kp = plan.num_segments_local * self.config.segment_width
         col = plan.spec.partition == "col"
@@ -329,9 +353,9 @@ class SerpensOperator:
         acc = f(self._idx, self._val, self._seg, self._seg_chunk,
                 *self._aux, xp)
         if col:
-            return acc[:m]
+            return self._finish(acc)
         acc = acc[:, :plan.block_m]
-        return acc.reshape((-1,) + acc.shape[2:])[:m]
+        return self._finish(acc.reshape((-1,) + acc.shape[2:]))
 
     def to_dense(self) -> np.ndarray:
         """Densify (testing only)."""

@@ -92,6 +92,22 @@ def pad_x(x, num_segments, segment_width):
     return jnp.pad(x.astype(jnp.float32), (0, kp - x.shape[0]))
 
 
+def resolve_backend(backend: str | None = None) -> str:
+    """Resolve a backend name to a concrete executor ("xla" | "pallas").
+
+    ``None``/``"auto"`` picks Pallas on TPU and XLA elsewhere.  Bind-time
+    callers (:class:`~repro.core.spmv.SerpensOperator`, the service)
+    resolve once and pass the concrete name down, so per-call dispatch —
+    including inside jit traces — never re-queries
+    ``jax.default_backend()``.
+    """
+    if backend is None or backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    if backend not in ("xla", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}")
+    return backend
+
+
 def run_stream(idx, val, seg_ids_tile, seg_ids_chunk, x, *, num_rows_padded,
                segment_width, tiles_per_chunk=1, backend="auto",
                interpret=None):
@@ -104,8 +120,7 @@ def run_stream(idx, val, seg_ids_tile, seg_ids_chunk, x, *, num_rows_padded,
     four (backend x arity) paths share one definition.
     """
     _count_dispatch()
-    if backend == "auto":
-        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    backend = resolve_backend(backend)
     if backend == "xla":
         if x.ndim == 1:
             return spmv_stream_xla(idx, val, seg_ids_tile, x,
@@ -154,8 +169,7 @@ def run_stream_fused(idx, val, seg_ids_tile, seg_ids_chunk, x, *, epilogue,
     """
     _count_dispatch()
     extras = tuple(extras)
-    if backend == "auto":
-        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    backend = resolve_backend(backend)
     if backend == "xla":
         acc = spmv_stream_xla(idx, val, seg_ids_tile, x,
                               num_rows_padded=num_rows_padded,

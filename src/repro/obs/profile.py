@@ -30,19 +30,28 @@ def plan_cost_report(op, *, measure: bool = False,
                      iters: int = 3) -> dict:
     """Cost-model report for one operator's channel-shard plan.
 
-    Per shard: nnz, slots, stream bytes, padding ratio, and the modeled
-    stream time ``bytes / bandwidth``.  With ``measure=True`` one matvec
+    Per shard: nnz, slots, stream bytes, padding ratio, per-lane live-slot
+    imbalance (max/mean), and the modeled stream time
+    ``bytes / bandwidth``.  With ``measure=True`` one matvec
     is compiled + timed (median of ``iters``) and the report adds the
     achieved GB/s and its fraction of the assumed peak — the roofline
     position — plus per-shard measured time attributed proportionally to
     stream bytes (shards dispatch in one call, so only the total is
     directly observable).
     """
+    import numpy as np
+    from repro.core.format import SENTINEL
     bw = float(bandwidth_gbps or ASSUMED_BANDWIDTH_GBPS)
     plan = op.plan
     shards = []
     for i, sm in enumerate(plan.shards):
         sb = int(sm.stream_bytes)
+        # Per-lane live-slot imbalance (max/mean): the structural feature
+        # the auto-tuner keys on — 1.0 is perfectly balanced lanes, higher
+        # means some lanes pad while others stream.
+        live = (np.asarray(sm.idx) != SENTINEL).sum(axis=(0, 1))
+        lane_mean = float(live.mean()) if live.size else 0.0
+        imb = float(live.max() / lane_mean) if lane_mean > 0.0 else 1.0
         shards.append({
             "shard": i,
             "nnz": int(sm.nnz),
@@ -50,6 +59,7 @@ def plan_cost_report(op, *, measure: bool = False,
             "slots": int(sm.idx.size),
             "stream_bytes": sb,
             "padding_ratio": float(sm.padding_ratio),
+            "lane_slot_imbalance": imb,
             "est_stream_s": sb / (bw * 1e9),
         })
     total_bytes = int(plan.stream_bytes)
@@ -66,6 +76,9 @@ def plan_cost_report(op, *, measure: bool = False,
         "bytes_per_nnz": total_bytes / max(int(plan.nnz), 1),
         "padded_slots": int(plan.idx.size),
         "padding_ratio": float(plan.padding_ratio),
+        "lane_assign": plan.spec.lane_assign,
+        "lane_slot_imbalance": max(
+            (sh["lane_slot_imbalance"] for sh in shards), default=1.0),
         "assumed_bandwidth_gbps": bw,
         "est_stream_s": total_bytes / (bw * 1e9),
         "shards": shards,

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 
 from repro import obs
 from repro.core.registry import MatrixRegistry
+from repro.kernels import ops as kops
 from repro.obs.metrics import MetricsRegistry
 
 log = logging.getLogger("repro.serve")
@@ -129,7 +130,8 @@ class SpMVService:
                  backend: str | None = None, mesh=None,
                  axis: str | None = None, partition: str | None = None,
                  max_stored_results: int = 4096,
-                 metrics: MetricsRegistry | None = None):
+                 metrics: MetricsRegistry | None = None,
+                 retune_every: int = 16):
         if max_bucket < 1 or max_bucket & (max_bucket - 1):
             raise ValueError("max_bucket must be a power of two >= 1")
         if mesh is not None and axis is None:
@@ -138,9 +140,21 @@ class SpMVService:
             raise ValueError("partition requires mesh")
         if max_stored_results < 1:
             raise ValueError("max_stored_results must be >= 1")
+        if retune_every < 0:
+            raise ValueError("retune_every must be >= 0")
         self.registry = registry
         self.max_bucket = max_bucket
-        self.backend = backend
+        # A backend override is resolved exactly once here ("auto" →
+        # concrete), never per dispatch; None defers to each operator's
+        # own bind-time choice.
+        self.backend = (None if backend is None
+                        else kops.resolve_backend(backend))
+        # Auto-tuned matrices feed observed slots/s back to the registry's
+        # tuner after every dispatch; every `retune_every` observations on
+        # a matrix the registry re-consults the tuner and swaps the plan
+        # if the ranking flipped (0 disables the re-probe cadence).
+        self.retune_every = int(retune_every)
+        self._tune_obs: dict[str, int] = {}
         # With a mesh, every dispatched SpMM runs the channel-shard plan
         # under shard_map over `axis` (registry caches the mesh binding).
         self.mesh = mesh
@@ -333,6 +347,9 @@ class SpMVService:
             "delta_encodes": rs.delta_encodes,
             "delta_seconds": rs.delta_seconds,
             "delta_slots_per_s": rs.delta_slots_per_s,
+            "tuner": (None if self.registry.tuner is None
+                      else self.registry.tuner.snapshot()),
+            "tuner_observations": dict(self._tune_obs),
         }
 
     # -- dispatch ---------------------------------------------------------
@@ -553,6 +570,7 @@ class SpMVService:
                       bucket=width):
             for req in batch:
                 obs.flow_step("request", req.ticket)
+            t_comp = time.perf_counter()
             if n == 1 and width == 1:
                 # Single-request fast path: the paper's plain SpMV.
                 req = batch[0]
@@ -591,6 +609,20 @@ class SpMVService:
                 self._m_batch_size.observe(n)
                 for req in batch:
                     self._m_dispatch_lat.observe(done - req.submit_time)
+            # Auto-tuning feedback: measured slots/s for this dispatch
+            # (device-blocked, so compute_s is real wall time) flows into
+            # the tuner; every retune_every observations the registry
+            # re-consults the ranking and may swap the plan.
+            compute_s = max(done - t_comp, 1e-9)
+            mid = batch[0].matrix_id
+            if self.registry.record_observation(
+                    mid, slots_per_s=op.padded_slots / compute_s,
+                    requests_per_s=n / compute_s):
+                with self._lock:
+                    count = self._tune_obs.get(mid, 0) + 1
+                    self._tune_obs[mid] = count
+                if self.retune_every and count % self.retune_every == 0:
+                    self.registry.retune(mid)
             for j, req in enumerate(batch):
                 results[req.ticket] = SpMVResult(
                     ticket=req.ticket, y=ys[:, j],

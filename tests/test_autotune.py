@@ -1,0 +1,412 @@
+"""Feature extraction + PlanTuner: heuristics, online learning, plumbing.
+
+Covers the ISSUE-8 acceptance surface: features match a naive numpy
+recomputation (property-tested when hypothesis is present), the tuner's
+heuristic choices land where the feature analysis says they should on
+synthetic extremes (banded -> column split family, power-law -> balanced
+lanes + spill), online observations flip a seeded-wrong prior within a
+few updates, the prior JSON round-trips, and the registry/service
+``spec="auto"`` path records decisions + observations end to end.
+"""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import autotune as AT
+from repro.core import features as FE
+from repro.core import format as F
+from repro.core.registry import MatrixRegistry
+from repro.serve.spmv_service import SpMVService
+
+CFG = F.SerpensConfig(segment_width=64, lanes=8, sublanes=4, raw_window=4)
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def feats(rows, cols, shape, cfg=CFG):
+    return FE.compute_features(np.asarray(rows), np.asarray(cols),
+                               shape, cfg)
+
+
+def naive_features(rows, cols, shape, cfg):
+    """Straight-line recomputation of every MatrixFeatures field."""
+    rows = np.asarray(rows, np.int64)
+    cols = np.asarray(cols, np.int64)
+    m, k = shape
+    nnz = rows.size
+    per_row = np.array([(rows == r).sum() for r in range(m)], np.float64)
+    mean = nnz / m
+    cv = float(per_row.std() / mean) if mean else 0.0
+    # Gini via mean absolute difference.
+    if nnz:
+        diffs = np.abs(per_row[:, None] - per_row[None, :])
+        gini = float(diffs.sum() / (2.0 * m * m * per_row.mean()))
+    else:
+        gini = 0.0
+    bandwidth = (float(np.abs(rows / (m - 1) - cols / (k - 1)).mean())
+                 if nnz and m > 1 and k > 1 else 0.0)
+    nseg = max(1, -(-k // cfg.segment_width))
+    seg = np.array([((cols // cfg.segment_width) == s).sum()
+                    for s in range(nseg)], np.float64)
+    if nnz and nseg > 1:
+        p = seg[seg > 0] / nnz
+        locality = 1.0 - float(-(p * np.log(p)).sum()) / np.log(nseg)
+    else:
+        locality = 1.0
+    lane = np.array([((rows % cfg.lanes) == l).sum()
+                     for l in range(cfg.lanes)], np.float64)
+    lane_imb = float(lane.max() / lane.mean()) if lane.mean() else 1.0
+    return dict(nnz=int(nnz), density=nnz / (m * k), nnz_row_mean=mean,
+                nnz_row_cv=cv, nnz_row_max=int(per_row.max()) if m else 0,
+                gini=gini, bandwidth=bandwidth, segment_locality=locality,
+                lane_imbalance=lane_imb, num_segments=nseg)
+
+
+class TestFeatures:
+    def test_matches_naive(self):
+        rng = np.random.default_rng(0)
+        for seed in range(5):
+            rng = np.random.default_rng(seed)
+            m, k = int(rng.integers(2, 60)), int(rng.integers(2, 90))
+            nnz = int(rng.integers(1, 300))
+            rows = rng.integers(0, m, nnz)
+            cols = rng.integers(0, k, nnz)
+            got = feats(rows, cols, (m, k))
+            want = naive_features(rows, cols, (m, k), CFG)
+            for name, val in want.items():
+                np.testing.assert_allclose(
+                    getattr(got, name), val, rtol=1e-12, atol=1e-12,
+                    err_msg=f"seed={seed} field={name}")
+
+    def test_cached_on_prepared_and_uses_bucket_key(self):
+        rng = np.random.default_rng(1)
+        rows = rng.integers(0, 40, 200)
+        cols = rng.integers(0, 120, 200)
+        vals = rng.normal(size=200).astype(np.float32)
+        prep = F.prepare(rows, cols, vals, (40, 120), CFG)
+        f1 = FE.features_of(prep)
+        assert prep.features is f1 and FE.features_of(prep) is f1
+        # bucket_key fast path == coordinate recompute
+        f2 = FE.compute_features(prep.rows, prep.cols, (40, 120), CFG)
+        assert f1 == f2
+
+    def test_empty_matrix(self):
+        f = feats([], [], (8, 8))
+        assert f.nnz == 0 and f.gini == 0.0 and f.nnz_row_cv == 0.0
+        assert "d-empty" in f.bucket()
+
+    def test_bucket_extremes(self):
+        # Diagonal band -> bw-band + cv-lo.
+        n = 64
+        diag = feats(np.arange(n), np.arange(n), (n, n))
+        assert "cv-lo|bw-band" in diag.bucket()
+        # One dense row among empties -> cv-hi, scattered.
+        rows = np.zeros(n, np.int64)
+        cols = np.arange(n)
+        hot = feats(rows, cols, (n, n))
+        assert "cv-hi" in hot.bucket() and hot.gini > 0.9
+        # Aspect prefixes and segment-count suffixes.
+        assert feats([0], [0], (64, 8)).bucket().startswith("tall|")
+        assert feats([0], [0], (8, 64)).bucket().startswith("wide|")
+        assert feats([0], [0], (8, 64)).bucket().endswith("|s1")
+        assert feats([0], [0], (8, 256)).bucket().endswith("|s-few")
+        assert feats([0], [0], (8, 4096)).bucket().endswith("|s-many")
+
+    def test_scale_invariant_bucket(self):
+        """Same structure at 2 scales (same density decade, comparable
+        column-segment count) lands in the same bucket."""
+        def band(n):
+            r = np.repeat(np.arange(n), 3)
+            c = np.clip(r + np.tile([-1, 0, 1], n), 0, n - 1)
+            return feats(r, c, (n, n))
+        assert band(150).bucket() == band(256).bucket()
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:
+    HAVE_HYP = False
+
+if HAVE_HYP:
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(2, 50), st.integers(2, 80), st.integers(1, 250),
+           st.integers(0, 10_000))
+    def test_property_features_match_naive(m, k, nnz, seed):
+        rng = np.random.default_rng(seed)
+        rows = rng.integers(0, m, nnz)
+        cols = rng.integers(0, k, nnz)
+        got = feats(rows, cols, (m, k))
+        want = naive_features(rows, cols, (m, k), CFG)
+        for name, val in want.items():
+            np.testing.assert_allclose(getattr(got, name), val,
+                                       rtol=1e-12, atol=1e-12,
+                                       err_msg=name)
+
+
+def power_law_feats(n=256, seed=3):
+    from repro.data import matrices as M
+    r, c, _ = M.power_law_graph(n, n * 10, seed=seed)
+    return feats(r, c, (n, n))
+
+
+def banded_feats(n=256):
+    r = np.repeat(np.arange(n), 3)
+    c = np.clip(r + np.tile([-1, 0, 1], n), 0, n - 1)
+    return feats(r, c, (n, n))
+
+
+class TestTunerHeuristics:
+    def test_power_law_leads_with_balanced_spill(self):
+        t = AT.PlanTuner(backend="xla", epsilon=0.0)
+        d = t.choose(power_law_feats())
+        assert d.candidate.lane_assign == "balanced"
+        assert d.candidate.spill is True
+        assert not d.explored and d.predicted == 0.0
+
+    def test_banded_leads_with_col_split(self):
+        t = AT.PlanTuner(backend="xla", epsilon=0.0)
+        d = t.choose(banded_feats())
+        assert d.candidate.partition == "col"
+        assert d.candidate.num_shards == 2
+
+    def test_pallas_candidates_never_override_raw_window(self):
+        for f in (power_law_feats(), banded_feats()):
+            for c in AT.default_candidates(f, backend="pallas"):
+                assert c.raw_window is None
+
+    def test_candidates_deduped(self):
+        for f in (power_law_feats(), banded_feats()):
+            cands = AT.default_candidates(f, backend="xla")
+            keys = [c.key for c in cands]
+            assert len(keys) == len(set(keys))
+
+
+class TestTunerLearning:
+    def test_observations_flip_seeded_wrong_prior(self):
+        """A prior that ranks the wrong arm best loses within a few
+        online observations (EWMA alpha=0.5, no exploration noise)."""
+        f = power_law_feats()
+        bucket = f.bucket()
+        t = AT.PlanTuner(backend="xla", epsilon=0.0)
+        cands = t.candidates(f)
+        wrong, right = cands[0], cands[1]
+        # Seed the wrong arm as heavily-measured best.
+        for _ in range(3):
+            t.observe(bucket, wrong, slots_per_s=1e9, requests_per_s=100.0)
+        assert t.choose(f).candidate.key == wrong.key
+        for i in range(4):
+            t.observe(bucket, wrong, slots_per_s=1e8, requests_per_s=10.0)
+            t.observe(bucket, right, slots_per_s=2e9, requests_per_s=500.0)
+        assert t.choose(f).candidate.key == right.key
+
+    def test_ranking_is_padding_invariant(self):
+        """Equal wall time, more padded slots must NOT rank higher: the
+        exploit score is requests/s, slots/s only telemetry."""
+        f = power_law_feats()
+        bucket = f.bucket()
+        t = AT.PlanTuner(backend="xla", epsilon=0.0)
+        a, b = t.candidates(f)[:2]
+        # b pads 2x (twice the slots/s at the same request rate).
+        t.observe(bucket, a, slots_per_s=1e6, requests_per_s=50.0)
+        t.observe(bucket, b, slots_per_s=2e6, requests_per_s=50.0 - 1e-9)
+        assert t.choose(f).candidate.key == a.key
+
+    def test_epsilon_probes_least_observed(self):
+        f = power_law_feats()
+        t = AT.PlanTuner(backend="xla", epsilon=0.999, seed=0)
+        picks = {t.choose(f).explored for _ in range(20)}
+        assert True in picks             # epsilon fires
+        d = next(d for d in (t.choose(f) for _ in range(20)) if d.explored)
+        assert d.candidate.key != d.ranked[0]
+        with pytest.raises(ValueError):
+            AT.PlanTuner(epsilon=1.0)
+        # explore=False always takes the ranked head.
+        assert not t.choose(f, explore=False).explored
+
+    def test_decision_metrics_counted(self):
+        from repro import obs
+        reg = obs.MetricsRegistry()
+        t = AT.PlanTuner(backend="xla", epsilon=0.0, metrics=reg)
+        t.choose(power_law_feats())
+        t.observe("b", AT.TunerCandidate(), slots_per_s=10.0,
+                  predicted=20.0)
+        snap = reg.snapshot()
+        assert "tuner_decisions_total" in snap
+        assert "tuner_predicted_over_observed_ratio" in snap
+
+
+class TestTunerPersistence:
+    def test_json_roundtrip_exact(self):
+        f = power_law_feats()
+        t = AT.PlanTuner(backend="xla", epsilon=0.0)
+        for i, c in enumerate(t.candidates(f)):
+            t.observe(f.bucket(), c, slots_per_s=float(100 + i),
+                      requests_per_s=float(10 + i))
+        blob = json.loads(json.dumps(t.to_json()))
+        t2 = AT.PlanTuner.from_json(blob, backend="xla", epsilon=0.0)
+        assert t2.to_json() == t.to_json()
+        assert t2.choose(f, explore=False).candidate.key \
+            == t.choose(f, explore=False).candidate.key
+
+    def test_load_accepts_sweep_artifact_wrapper(self, tmp_path):
+        t = AT.PlanTuner(backend="xla")
+        t.observe("bk", AT.TunerCandidate(), slots_per_s=5.0,
+                  requests_per_s=2.0)
+        artifact = {"matrices": [], "prior": t.to_json()}
+        p = tmp_path / "sweep.json"
+        p.write_text(json.dumps(artifact))
+        t2 = AT.PlanTuner.load(p, backend="xla")
+        assert t2.to_json()["buckets"] == t.to_json()["buckets"]
+
+    def test_save_load(self, tmp_path):
+        t = AT.PlanTuner(backend="xla")
+        t.observe("bk", AT.TunerCandidate(lane_assign="balanced",
+                                          spill=True), slots_per_s=7.0)
+        p = tmp_path / "prior.json"
+        t.save(p)
+        t2 = AT.PlanTuner.load(p, backend="xla")
+        assert t2.to_json() == t.to_json()
+
+    def test_candidate_dict_roundtrip(self):
+        c = AT.TunerCandidate("col", 2, "balanced", "xla", spill=True,
+                              lane_balance=1.25, raw_window=2)
+        c2 = AT.TunerCandidate.from_dict(
+            json.loads(json.dumps(c.to_dict())))
+        assert c2 == c and c2.key == c.key
+
+    @pytest.mark.skipif(
+        not os.path.exists(os.path.join(REPO, "results",
+                                        "autotune_sweep.json")),
+        reason="committed sweep artifact missing")
+    def test_shipped_prior_roundtrips(self):
+        """The committed sweep artifact loads as a prior and survives a
+        save/load cycle (the CI gate, runnable locally)."""
+        path = os.path.join(REPO, "results", "autotune_sweep.json")
+        t = AT.PlanTuner.load(path, backend="xla")
+        blob = t.to_json()
+        assert blob["buckets"], "shipped prior has no buckets"
+        t2 = AT.PlanTuner.from_json(blob, backend="xla")
+        assert t2.to_json() == blob
+
+
+def small_coo(m=48, k=64, nnz=500, seed=0, skew=False):
+    rng = np.random.default_rng(seed)
+    if skew:
+        from repro.data import matrices as M
+        r, c, v = M.power_law_graph(m, nnz, seed=seed)
+        return r, c, v, (m, m)
+    return (rng.integers(0, m, nnz), rng.integers(0, k, nnz),
+            rng.normal(size=nnz).astype(np.float32), (m, k))
+
+
+class TestRegistryAuto:
+    def test_put_auto_correct_and_stats(self):
+        r, c, v, shape = small_coo(m=64, nnz=900, seed=2, skew=True)
+        reg = MatrixRegistry(config=CFG, backend="xla")
+        mid = reg.put(r, c, v, shape, spec="auto")
+        dense = np.zeros(shape, np.float64)
+        np.add.at(dense, (r, c), v)
+        x = np.random.default_rng(3).normal(size=shape[1]) \
+            .astype(np.float32)
+        y = np.asarray(reg.get(mid).matvec(x))
+        np.testing.assert_allclose(y, dense @ x, atol=1e-3, rtol=1e-3)
+        st = reg.encode_stats()[mid]
+        assert st["auto_tuned"] and st["tune"]["bucket"]
+        assert st["spec"].count(":") == 2
+        assert reg.tune_decision(mid) is not None
+
+    def test_repeat_auto_put_is_hit(self):
+        r, c, v, shape = small_coo(seed=4)
+        reg = MatrixRegistry(config=CFG, backend="xla")
+        mid1 = reg.put(r, c, v, shape, spec="auto")
+        mid2 = reg.put(r, c, v, shape, spec="auto")
+        assert mid1 == mid2 and reg.stats.hits == 1
+
+    def test_manual_put_records_no_tune(self):
+        r, c, v, shape = small_coo(seed=5)
+        reg = MatrixRegistry(config=CFG, backend="xla")
+        mid = reg.put(r, c, v, shape)
+        assert reg.encode_stats()[mid]["auto_tuned"] is False
+        assert not reg.record_observation(mid, slots_per_s=1.0)
+        assert not reg.retune(mid)
+
+    def test_observation_and_retune_swaps_plan(self):
+        r, c, v, shape = small_coo(m=64, nnz=900, seed=6, skew=True)
+        reg = MatrixRegistry(config=CFG, backend="xla")
+        mid = reg.put(r, c, v, shape, spec="auto")
+        d = reg.tune_decision(mid)
+        chosen = d.candidate.key
+        other = next(k for k in d.ranked if k != chosen)
+        # Hammer the tuner: chosen arm is slow, another arm is fast.
+        for cand in AT.default_candidates(
+                FE.compute_features(r, c, shape, CFG), backend="xla"):
+            rate = 1e3 if cand.key == chosen else \
+                (1e7 if cand.key == other else None)
+            if rate:
+                for _ in range(4):
+                    reg.tuner.observe(d.bucket, cand, slots_per_s=rate,
+                                      requests_per_s=rate)
+        assert reg.retune(mid) is True
+        d2 = reg.tune_decision(mid)
+        assert d2.candidate.key == other
+        # Plan swap preserved correctness.
+        dense = np.zeros(shape, np.float64)
+        np.add.at(dense, (r, c), v)
+        x = np.random.default_rng(7).normal(size=shape[1]) \
+            .astype(np.float32)
+        np.testing.assert_allclose(np.asarray(reg.get(mid).matvec(x)),
+                                   dense @ x, atol=1e-3, rtol=1e-3)
+        # Re-tuning again with a stable ranking is a no-op.
+        assert reg.retune(mid) is False
+
+    def test_record_observation_feeds_tuner(self):
+        r, c, v, shape = small_coo(seed=8)
+        reg = MatrixRegistry(config=CFG, backend="xla")
+        mid = reg.put(r, c, v, shape, spec="auto")
+        d = reg.tune_decision(mid)
+        assert reg.record_observation(mid, slots_per_s=123.0,
+                                      requests_per_s=4.0)
+        snap = reg.tuner.snapshot()[d.bucket]
+        arm = next(a for a in snap if a["key"] == d.candidate.key)
+        assert arm["count"] >= 1 and arm["score"] > 0
+
+
+class TestServiceAuto:
+    def test_dispatch_records_observations(self):
+        r, c, v, shape = small_coo(m=64, nnz=700, seed=9, skew=True)
+        reg = MatrixRegistry(config=CFG, backend="xla")
+        mid = reg.put(r, c, v, shape, spec="auto")
+        svc = SpMVService(reg, max_bucket=8, retune_every=4)
+        dense = np.zeros(shape, np.float64)
+        np.add.at(dense, (r, c), v)
+        rng = np.random.default_rng(10)
+        for _ in range(3):
+            xs = rng.normal(size=(2, shape[1])).astype(np.float32)
+            tickets = [svc.submit(mid, x) for x in xs]
+            res = svc.flush()
+            for t, x in zip(tickets, xs):
+                np.testing.assert_allclose(res[t].y, dense @ x,
+                                           atol=1e-3, rtol=1e-3)
+        snap = svc.snapshot()
+        assert snap["tuner_observations"].get(mid, 0) == 3
+        assert snap["tuner"], "tuner state missing from snapshot"
+        d = reg.tune_decision(mid)
+        arm = next(a for a in snap["tuner"][d.bucket]
+                   if a["key"] == d.candidate.key)
+        assert arm["count"] == 3
+
+    def test_retune_every_zero_disables(self):
+        r, c, v, shape = small_coo(seed=11)
+        reg = MatrixRegistry(config=CFG, backend="xla")
+        mid = reg.put(r, c, v, shape, spec="auto")
+        svc = SpMVService(reg, max_bucket=4, retune_every=0)
+        x = np.random.default_rng(12).normal(size=shape[1]) \
+            .astype(np.float32)
+        svc.submit(mid, x)
+        svc.flush()                     # records, but never retunes
+        assert svc.snapshot()["tuner_observations"][mid] == 1
+        with pytest.raises(ValueError):
+            SpMVService(reg, retune_every=-1)
