@@ -23,7 +23,8 @@ import os
 
 import numpy as np
 
-from benchmarks.common import time_call, emit, add_trace_arg, tracing
+from benchmarks.common import (time_call, emit, add_trace_arg, tracing,
+                               verify_plan_timed)
 from repro.core import format as F
 from repro.core import partition as PT
 from repro.core.spmv import SerpensOperator
@@ -61,6 +62,9 @@ def run(dry_run: bool = False, out_path: str = DEFAULT_OUT,
         plan = (plan1 if shards == 1 else
                 PT.make_plan(rows, cols, vals, (n, n), cfg,
                              PT.PlanSpec(partition, shards)))
+        # Ingest guard: no sweep row is published for a stream that fails
+        # the format contract (raises VerificationError).
+        verify_s = verify_plan_timed(plan, mode="fast")
         op = SerpensOperator(plan, backend="xla")
         y = np.asarray(op.matvec(x))
         np.testing.assert_allclose(y, ref, rtol=2e-4, atol=2e-4)
@@ -84,6 +88,7 @@ def run(dry_run: bool = False, out_path: str = DEFAULT_OUT,
             "padding_ratio": plan.padding_ratio,
             "lane_slot_imbalance": imbalance,
             "modeled_speedup": modeled,
+            "verify_s": verify_s,
         }
         sweep.append(row)
         emit(f"channel_scaling/shards{shards:02d}", sec * 1e6,

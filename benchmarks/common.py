@@ -24,6 +24,28 @@ def emit(name, us_per_call, derived):
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
+def verify_plan_timed(plan, rows=None, cols=None, vals=None,
+                      mode: str = "fast") -> float:
+    """Run the stream verifier on a freshly built plan; return seconds.
+
+    Every benchmark that encodes a plan funnels its ingest check through
+    here, so a sweep can't publish numbers for a stream that violates the
+    format contract.  Raises :class:`repro.analysis.VerificationError`
+    on any finding; pass the source COO (with ``mode="full"``) to also
+    prove the round-trip.
+    """
+    from repro.analysis.verify import VerificationError, verify_plan
+    t0 = time.perf_counter()
+    if rows is not None and mode == "full":
+        diags = verify_plan(plan, rows, cols, vals, mode="full")
+    else:
+        diags = verify_plan(plan, mode=mode)
+    dt = time.perf_counter() - t0
+    if not diags.ok:
+        raise VerificationError(diags)
+    return dt
+
+
 def add_trace_arg(ap):
     """Attach the standard ``--trace-out`` flag to an argparse parser."""
     ap.add_argument("--trace-out", default=None, metavar="PATH",

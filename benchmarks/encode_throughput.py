@@ -114,7 +114,10 @@ def run(dry_run: bool = False, out_path: str = DEFAULT_OUT,
                     assert all(np.array_equal(a, b)
                                for a, b in zip(tv, tr)), "round-trip differs"
                     assert sm.padding_ratio <= smr.padding_ratio + 1e-12
-                    F.check_invariants(sm)
+                    # Full verifier proof, source COO included — the
+                    # round-trip rule re-derives every triple from the
+                    # stream, so the speedup row can't hide a bad encode.
+                    F.check_invariants(sm, source=(rows, cols, vals))
                     row["reference_s"] = ref_s
                     row["speedup"] = ref_s / vec_s
                 else:

@@ -1,0 +1,127 @@
+"""Verifier overhead: the ``verify="fast"`` ingest gate must stay < 5%.
+
+    PYTHONPATH=src:. python benchmarks/verify_overhead.py [--dry-run]
+                     [--out results/verify_overhead.json]
+
+The registry can run the encoder-independent stream verifier
+(``repro.analysis.verify``) on every encoded plan before it installs
+(``MatrixRegistry(verify=...)`` / ``put(verify=...)``).  For that gate to
+be on-by-default-viable, the O(slots) "fast" pass must be a rounding
+error next to the encode it audits.  This benchmark times
+``make_plan`` vs ``verify_plan(mode="fast")`` and ``mode="full"``
+(RAW-window scan + spill caps + round-trip-vs-source) across the
+config/partition corners that change the stream shape, and **asserts**
+fast/encode < 5% on every row.  Full mode is recorded, not asserted — it
+re-sorts the source COO, so it legitimately costs a fraction of the
+encode itself and is priced for debug use.
+
+Emits the standard CSV rows plus a JSON report (``--out``).
+"""
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.analysis import verify_plan
+from repro.core import format as F
+from repro.core import partition as PT
+from repro.data import matrices as M
+
+DEFAULT_OUT = os.path.join("results", "verify_overhead.json")
+FAST_BUDGET = 0.05
+
+BASE = dict(segment_width=512, lanes=16, sublanes=8, raw_window=2)
+CASES = [
+    # (name, config, spec)
+    ("paper", F.SerpensConfig(**BASE), PT.PlanSpec()),
+    ("spill", F.SerpensConfig(**BASE, spill_hot_rows=True,
+                              lane_balance=1.1), PT.PlanSpec()),
+    ("bf16", F.SerpensConfig(**BASE, spill_hot_rows=True,
+                             value_dtype="bfloat16"), PT.PlanSpec()),
+    ("row4", F.SerpensConfig(**BASE, spill_hot_rows=True),
+     PT.PlanSpec("row", 4)),
+    ("balanced", F.SerpensConfig(**BASE, spill_hot_rows=True),
+     PT.PlanSpec("row", 2, lane_assign="balanced")),
+]
+
+
+def _best_of(fn, iters):
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(dry_run: bool = False, out_path: str = DEFAULT_OUT):
+    # Dry mode still needs enough slots that the microsecond-scale fast
+    # pass measures work, not per-call overhead — smaller matrices make
+    # the asserted ratio an artifact of Python fixed costs.
+    n = 8_000 if dry_run else 30_000
+    nnz = 80_000 if dry_run else 300_000
+    iters = 2 if dry_run else 5
+    rows, cols, vals = M.power_law_graph(n, nnz, seed=23)
+
+    sweep = []
+    worst = 0.0
+    for name, cfg, spec in CASES:
+        encode_s = _best_of(
+            lambda: PT.make_plan(rows, cols, vals, (n, n), cfg, spec),
+            iters)
+        plan = PT.make_plan(rows, cols, vals, (n, n), cfg, spec)
+        # The fast pass is microseconds, so a best-of-2 would mostly
+        # measure scheduler noise — give it more samples than the encode.
+        fast_s = _best_of(lambda: verify_plan(plan, mode="fast")
+                          .raise_if_error(), 5 * iters)
+        full_s = _best_of(lambda: verify_plan(plan, rows, cols, vals,
+                                              mode="full")
+                          .raise_if_error(), max(1, iters - 1))
+        frac = fast_s / encode_s
+        worst = max(worst, frac)
+        row = {
+            "case": name,
+            "partition": spec.partition,
+            "num_shards": spec.num_shards,
+            "slots": int(plan.idx.size),
+            "encode_s": encode_s,
+            "verify_fast_s": fast_s,
+            "verify_full_s": full_s,
+            "fast_fraction": frac,
+            "full_fraction": full_s / encode_s,
+        }
+        sweep.append(row)
+        emit(f"verify_overhead/{name}", fast_s * 1e6,
+             f"fast={frac * 100:.2f}%|full={full_s / encode_s * 100:.1f}%"
+             f"|encode_us={encode_s * 1e6:.0f}")
+        assert frac < FAST_BUDGET, (
+            f"{name}: fast verify is {frac:.1%} of encode "
+            f"(budget {FAST_BUDGET:.0%})")
+
+    result = {
+        "matrix": {"n": n, "nnz": int(rows.size), "kind": "power_law"},
+        "budget": FAST_BUDGET,
+        "worst_fast_fraction": worst,
+        "dry_run": dry_run,
+        "sweep": sweep,
+    }
+    if out_path:
+        os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=2)
+        emit("verify_overhead/json", 0.0, f"path={out_path}")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--dry-run", action="store_true",
+                    help="small matrix, fewer iters (CI smoke)")
+    ap.add_argument("--out", default=DEFAULT_OUT,
+                    help="where to write the report JSON")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(dry_run=args.dry_run, out_path=args.out)

@@ -1,0 +1,27 @@
+"""Static verification subsystem: stream/plan verifier + repo-rule linter.
+
+Two pillars (see ``python -m repro.analysis --help``):
+
+* :mod:`repro.analysis.verify` — an encoder-independent checker that
+  proves the Serpens stream invariants (RAW window, segment monotonicity,
+  sentinel legality, spill consistency, round-trip, ...) over any
+  :class:`~repro.core.format.SerpensMatrix` or
+  :class:`~repro.core.partition.ChannelShardPlan`, reporting structured
+  :class:`~repro.analysis.diagnostics.Diagnostics`.
+* :mod:`repro.analysis.lint` — an AST linter for the concurrency/packing
+  contracts this repo has shipped bugs against, with per-line
+  ``# repro-lint: disable=<rule>`` suppressions.
+
+Numpy-only at import: safe to run in encode workers and jax-free CI.
+"""
+from repro.analysis.diagnostics import Diagnostic, Diagnostics
+from repro.analysis.lint import lint_paths, lint_source
+from repro.analysis.verify import (FULL_ONLY_RULES, VERIFIER_RULES,
+                                   VERIFY_MODES, VerificationError,
+                                   verify_matrix, verify_plan)
+
+__all__ = [
+    "Diagnostic", "Diagnostics", "VerificationError",
+    "VERIFY_MODES", "VERIFIER_RULES", "FULL_ONLY_RULES",
+    "verify_matrix", "verify_plan", "lint_paths", "lint_source",
+]

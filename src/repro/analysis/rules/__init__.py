@@ -1,0 +1,19 @@
+"""Registry of repo lint rules (see :mod:`repro.analysis.lint`)."""
+from repro.analysis.rules.asserts import BareAssertRule
+from repro.analysis.rules.imports import WorkerImportRule
+from repro.analysis.rules.locking import LockBlockingCallRule, StatLockRule
+from repro.analysis.rules.mutation import FrozenMutationRule
+from repro.analysis.rules.spans import SpanContextRule
+
+ALL_RULES = (
+    WorkerImportRule(),
+    LockBlockingCallRule(),
+    StatLockRule(),
+    SpanContextRule(),
+    BareAssertRule(),
+    FrozenMutationRule(),
+)
+
+__all__ = ["ALL_RULES", "WorkerImportRule", "LockBlockingCallRule",
+           "StatLockRule", "SpanContextRule", "BareAssertRule",
+           "FrozenMutationRule"]

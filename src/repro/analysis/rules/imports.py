@@ -1,0 +1,81 @@
+"""worker-import: jax / repro.obs must stay out of worker-safe modules.
+
+``core/format.py`` and ``core/parallel_encode.py`` run inside spawned
+encode worker processes that must never pay (or trip over) a jax import;
+``repro.obs`` must itself be importable without jax so tracing can wrap
+the workers.  A module-scope import regresses that contract silently —
+everything keeps working on the host until a worker pool starts.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Tuple
+
+from repro.analysis.lint import LintContext, Rule
+
+# path suffix (posix) -> import roots banned at module scope.
+WORKER_SAFE = (
+    ("repro/core/format.py", ("jax", "repro.obs")),
+    ("repro/core/parallel_encode.py", ("jax", "repro.obs")),
+    ("repro/obs/", ("jax",)),
+)
+
+
+def _banned_for(norm_path: str) -> Tuple[str, ...]:
+    for suffix, banned in WORKER_SAFE:
+        if suffix.endswith("/"):
+            if ("/" + suffix) in ("/" + norm_path) or \
+                    norm_path.startswith(suffix):
+                return banned
+        elif norm_path.endswith(suffix):
+            return banned
+    return ()
+
+
+def _module_scope_imports(tree: ast.Module):
+    """Top-level imports, descending into module-level if/try blocks but
+    not into function or class bodies (those are lazy by construction)."""
+    stack: List[ast.stmt] = list(tree.body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            yield node
+        elif isinstance(node, (ast.If, ast.Try, ast.While, ast.For,
+                               ast.With)):
+            for field in ast.iter_child_nodes(node):
+                if isinstance(field, ast.stmt):
+                    stack.append(field)
+
+
+def _hits(node, banned: Tuple[str, ...]) -> List[str]:
+    names: List[str] = []
+    if isinstance(node, ast.Import):
+        names = [a.name for a in node.names]
+    elif isinstance(node, ast.ImportFrom) and node.level == 0:
+        mod = node.module or ""
+        names = [mod] + [f"{mod}.{a.name}" if mod else a.name
+                         for a in node.names]
+    out = []
+    for n in names:
+        for b in banned:
+            if n == b or n.startswith(b + "."):
+                out.append(n)
+                break
+    return out
+
+
+class WorkerImportRule(Rule):
+    name = "worker-import"
+    description = ("module-scope jax/repro.obs import in a worker-safe "
+                   "module (core/format.py, core/parallel_encode.py, "
+                   "obs/*) — defer it into the function that needs it")
+
+    def check(self, ctx: LintContext) -> Iterator[Tuple[int, int, str]]:
+        banned = _banned_for(ctx.norm_path)
+        if not banned:
+            return
+        for node in _module_scope_imports(ctx.tree):
+            for name in _hits(node, banned):
+                yield (node.lineno, node.col_offset,
+                       f"module-scope import of {name!r} in worker-safe "
+                       f"module (banned roots here: {', '.join(banned)})")

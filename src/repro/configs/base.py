@@ -108,9 +108,10 @@ class ModelConfig:
 
     @property
     def num_periods(self) -> int:
-        assert self.num_layers % len(self.layout) == 0, (
-            f"{self.arch_id}: num_layers={self.num_layers} not divisible by "
-            f"period length {len(self.layout)}")
+        if self.num_layers % len(self.layout):
+            raise ValueError(
+                f"{self.arch_id}: num_layers={self.num_layers} not "
+                f"divisible by period length {len(self.layout)}")
         return self.num_layers // len(self.layout)
 
     @property

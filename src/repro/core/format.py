@@ -1207,29 +1207,24 @@ def decode_to_coo(sm: SerpensMatrix):
     return out_r, out_c, out_v
 
 
-def check_invariants(sm: SerpensMatrix) -> None:
+def check_invariants(sm: SerpensMatrix, *, source=None,
+                     row_perm=None) -> None:
     """Assert the format invariants the hardware schedule relies on.
 
-    1. seg_ids ascending (each x segment staged once).
-    2. lane ownership: decoded row ≡ lane (mod LANES) — by construction.
-    3. RAW freedom: within each lane, no duplicate lane-local row inside any
-       window of ``raw_window`` consecutive slots *within a segment run*.
+    Thin wrapper over the encoder-independent verifier
+    (:func:`repro.analysis.verify.verify_matrix`), kept for its historic
+    name and assert-style contract.  Beyond the original three checks
+    (seg_ids ascending, lane ownership, RAW-window freedom) this now also
+    proves sentinel legality, lane capacity, column ranges, nnz/byte
+    accounting, spill caps and the aux side-stream; pass ``source=(rows,
+    cols, vals)`` to additionally prove the round-trip multiset and
+    per-lane ownership against the original COO, and ``row_perm`` to
+    validate a balanced-lane permutation.  Raises ``AssertionError``
+    listing *all* violations (plan-level checks live in
+    :func:`repro.analysis.verify.verify_plan`).
     """
-    cfg = sm.config
-    if not np.all(np.diff(sm.seg_ids) >= 0):
-        raise AssertionError("seg_ids must be non-decreasing")
-    idx = sm.idx.reshape(-1, cfg.lanes).astype(np.int64)
-    seg = np.repeat(sm.seg_ids, cfg.sublanes)
-    rows_local = (idx >> ROW_BITS) & COL_MASK
-    live = idx != SENTINEL
-    t = cfg.raw_window
-    # Whole-array shifted comparison: one vectorized check per offset covers
-    # every lane at once (the per-lane Python loop was O(lanes · T · N)).
-    for off in range(1, min(t, idx.shape[0])):
-        clash = (live[:-off] & live[off:]
-                 & (rows_local[:-off] == rows_local[off:])
-                 & (seg[:-off] == seg[off:])[:, None])
-        if np.any(clash):
-            slot, lane = np.argwhere(clash)[0]
-            raise AssertionError(
-                f"RAW violation: lane {lane}, offset {off} (slot {slot})")
+    # Deferred import: analysis depends on nothing here, but keeping
+    # format import-light (and cycle-free) matters for encode workers.
+    from repro.analysis.verify import verify_matrix
+    verify_matrix(sm, mode="full", source=source,
+                  row_perm=row_perm).raise_if_error(AssertionError)

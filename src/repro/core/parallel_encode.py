@@ -123,7 +123,10 @@ class EncodePool:
         with self._lock:
             if self._pool is not None:
                 self._pool.terminate()
-                self._pool.join()
+                # Teardown path: holding the lock across the join is the
+                # point — _ensure must not race a new pool into existence
+                # while the old workers drain.
+                self._pool.join()  # repro-lint: disable=lock-blocking-call
                 self._pool = None
 
     def __enter__(self) -> "EncodePool":

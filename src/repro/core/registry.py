@@ -229,12 +229,22 @@ class MatrixRegistry:
                  encode_pool: penc.EncodePool | None = None,
                  min_parallel_nnz: int = 1 << 21,
                  background_threads: int = 2,
-                 tuner=None):
+                 tuner=None, verify: str = "off"):
         if byte_budget <= 0:
             raise ValueError("byte_budget must be positive")
+        if verify not in ("full", "fast", "off"):
+            raise ValueError(
+                f"verify must be 'full', 'fast' or 'off', got {verify!r}")
         self.byte_budget = int(byte_budget)
         self.default_config = config
         self.default_backend = backend
+        # Debug gate: run the encoder-independent stream verifier
+        # (repro.analysis.verify) on every encoded plan before it installs.
+        # "fast" = O(slots) structural rules (<5% of encode time, see
+        # benchmarks/verify_overhead.py); "full" adds the RAW-window scan,
+        # spill caps and the round-trip-vs-source proof.  Per-call
+        # override: put(verify=...).
+        self.default_verify = verify
         # Auto-tuning (put(spec="auto")): shared PlanTuner, lazily created
         # on first use when not injected (e.g. preloaded with the shipped
         # prior from results/autotune_sweep.json).
@@ -383,7 +393,8 @@ class MatrixRegistry:
                 self.tuner = PlanTuner(backend=None if be == "auto" else be)
             return self.tuner
 
-    def _encode_plan(self, rows, cols, vals, shape, cfg, spec, be):
+    def _encode_plan(self, rows, cols, vals, shape, cfg, spec, be,
+                     verify: str | None = None):
         """prepare + encode + bind (the pure, slow part; no lock held).
 
         Large matrices fan out over the process pool
@@ -426,6 +437,23 @@ class MatrixRegistry:
                     rows, cols, vals, shape, cfg, spec, n_workers=nw,
                     pool=self._encode_pool() if nw > 1 else None)
                 sp.args["slots"] = int(plan.idx.size)
+        verify = self.default_verify if verify is None else verify
+        if verify not in ("full", "fast", "off"):
+            raise ValueError(
+                f"verify must be 'full', 'fast' or 'off', got {verify!r}")
+        if verify != "off":
+            # Encoder-independent proof of the stream invariants before the
+            # plan can serve ("full" additionally replays the source COO
+            # through the round-trip / lane-ownership rules).
+            from repro.analysis.verify import VerificationError, verify_plan
+            with obs.span("verify", cat="registry", mode=verify) as sp:
+                if verify == "full":
+                    diags = verify_plan(plan, rows, cols, vals, mode="full")
+                else:
+                    diags = verify_plan(plan, mode="fast")
+                sp.args["findings"] = len(diags.findings)
+            if not diags.ok:
+                raise VerificationError(diags)
         with obs.span("bind", cat="registry"):
             op = SerpensOperator(plan, backend=be)
         dt = time.perf_counter() - t0
@@ -462,7 +490,7 @@ class MatrixRegistry:
             matrix_id: str | None = None, partition: str = "single",
             num_shards: int = 1, lane_assign: str = "modulo",
             spec=None, value_dtype: str | None = None,
-            blocking: bool = True) -> str:
+            blocking: bool = True, verify: str | None = None) -> str:
         """Ensure the matrix's plan is cached; return its id.
 
         A repeat ``put`` of the same content + geometry is a *hit*: the
@@ -488,6 +516,15 @@ class MatrixRegistry:
         entry installs.  The triples are copied at submit, so the caller
         may mutate its buffers right away.  Stats record the queue wait
         (submit → encode start) separately from encode wall-time.
+
+        ``verify`` gates the encode through the encoder-independent stream
+        verifier (:mod:`repro.analysis.verify`): ``"fast"`` proves the
+        O(slots) structural rules, ``"full"`` additionally proves the
+        RAW window, spill caps and the round-trip against the submitted
+        triples; a failing plan raises
+        :class:`~repro.analysis.verify.VerificationError` (surfaced via
+        :meth:`ready`/:meth:`get` for background encodes) and never
+        installs.  ``None`` defers to the registry-wide default.
         """
         cfg = config or self.default_config
         if value_dtype is not None:
@@ -529,7 +566,7 @@ class MatrixRegistry:
                         (int(shape[0]), int(shape[1])))
                 self._get_executor().submit(
                     self._background_encode, key, pending, args, cfg,
-                    spec, be, obs.capture_context())
+                    spec, be, obs.capture_context(), verify)
                 obs.instant("encode-queued", cat="registry", matrix=key)
                 return key
         if same_pending:                   # blocking put over a queued twin
@@ -546,13 +583,14 @@ class MatrixRegistry:
             # put still promises a cached entry, so encode it ourselves.
         # Encode outside the lock — it is the slow part and pure.
         prep, plan, op, dt, slots, spec2, be2, tune = self._encode_plan(
-            rows, cols, vals, shape, cfg, spec, be)
+            rows, cols, vals, shape, cfg, spec, be, verify)
         return self._install(key, ck, spec2, be2, prep, plan, op, dt, slots,
                              tune=tune,
                              base_config=cfg if tune is not None else None)
 
     def _background_encode(self, key, pending: _PendingEncode, args, cfg,
-                           spec, be, trace_ctx: dict | None = None) -> None:
+                           spec, be, trace_ctx: dict | None = None,
+                           verify: str | None = None) -> None:
         """Executor job for put(blocking=False).
 
         ``trace_ctx`` is the submitter's ambient trace context
@@ -566,7 +604,8 @@ class MatrixRegistry:
             try:
                 rows, cols, vals, shape = args
                 prep, plan, op, dt, slots, spec2, be2, tune = \
-                    self._encode_plan(rows, cols, vals, shape, cfg, spec, be)
+                    self._encode_plan(rows, cols, vals, shape, cfg, spec,
+                                      be, verify)
             except BaseException as e:      # surfaced by ready()/get()
                 obs.instant("encode-failed", cat="registry", error=str(e))
                 with self._lock:
@@ -1089,7 +1128,7 @@ class MatrixRegistry:
                 if db:
                     self._bytes -= db
                     e.ops.clear()
-                    self.stats.bindings_dropped += 1
+                    self.stats.bindings_dropped += 1  # repro-lint: disable=stat-lock
         if self._bytes > self.byte_budget:
             victims = [k for k in self._entries if k != keep] + \
                 ([keep] if keep in self._entries else [])
@@ -1100,11 +1139,11 @@ class MatrixRegistry:
                 if e.prepared is not None:
                     self._bytes -= e.prepared_bytes
                     e.prepared = None
-                    self.stats.prepared_drops += 1
+                    self.stats.prepared_drops += 1  # repro-lint: disable=stat-lock
         while self._bytes > self.byte_budget and len(self._entries) > 1:
             old_key, old = next(iter(self._entries.items()))
             if old_key == keep:
                 break  # never evict the entry just inserted/extended
             del self._entries[old_key]
             self._bytes -= old.total_bytes
-            self.stats.evictions += 1
+            self.stats.evictions += 1  # repro-lint: disable=stat-lock

@@ -80,9 +80,15 @@ def spmv_pallas(idx, val, seg_ids, x2d, *, num_rows_padded, segment_width,
       acc: float32 [num_rows_padded] with acc[r] = (A @ x)[r].
     """
     num_tiles, sub, lanes = idx.shape
-    assert num_tiles % tiles_per_chunk == 0
+    if num_tiles % tiles_per_chunk:
+        raise ValueError(
+            f"stream has {num_tiles} tiles, not a multiple of "
+            f"tiles_per_chunk={tiles_per_chunk}")
     num_chunks = num_tiles // tiles_per_chunk
-    assert seg_ids.shape == (num_chunks,), (seg_ids.shape, num_chunks)
+    if seg_ids.shape != (num_chunks,):
+        raise ValueError(
+            f"seg_ids shaped {seg_ids.shape}, expected ({num_chunks},) — "
+            "a wrong length would silently mis-index x segments")
     r = num_rows_padded // lanes
     w = segment_width
 
@@ -144,9 +150,15 @@ def spmm_pallas(idx, val, seg_ids, x3d, *, num_rows_padded, segment_width,
     from jax.experimental.pallas import tpu as pltpu
 
     num_tiles, sub, lanes = idx.shape
-    assert num_tiles % tiles_per_chunk == 0
+    if num_tiles % tiles_per_chunk:
+        raise ValueError(
+            f"stream has {num_tiles} tiles, not a multiple of "
+            f"tiles_per_chunk={tiles_per_chunk}")
     num_chunks = num_tiles // tiles_per_chunk
-    assert seg_ids.shape == (num_chunks,), (seg_ids.shape, num_chunks)
+    if seg_ids.shape != (num_chunks,):
+        raise ValueError(
+            f"seg_ids shaped {seg_ids.shape}, expected ({num_chunks},) — "
+            "a wrong length would silently mis-index x segments")
     r = num_rows_padded // lanes
     w = segment_width
     n = x3d.shape[-1]
@@ -204,9 +216,15 @@ def spmv_fused_pallas(idx, val, seg_ids, x2d, extras=(), *, epilogue,
     from jax.experimental.pallas import tpu as pltpu
 
     num_tiles, sub, lanes = idx.shape
-    assert num_tiles % tiles_per_chunk == 0
+    if num_tiles % tiles_per_chunk:
+        raise ValueError(
+            f"stream has {num_tiles} tiles, not a multiple of "
+            f"tiles_per_chunk={tiles_per_chunk}")
     num_chunks = num_tiles // tiles_per_chunk
-    assert seg_ids.shape == (num_chunks,), (seg_ids.shape, num_chunks)
+    if seg_ids.shape != (num_chunks,):
+        raise ValueError(
+            f"seg_ids shaped {seg_ids.shape}, expected ({num_chunks},) — "
+            "a wrong length would silently mis-index x segments")
     r = num_rows_padded // lanes
     w = segment_width
     extras = tuple(extras)

@@ -138,7 +138,8 @@ def _dispatch_ragged_ep(params, xt, topi, topw, cfg, mesh):
     dp = layers.dp_spec()
     tp = layers.tp_spec()
     ntp = mesh.shape[tp]
-    assert e % ntp == 0, f"experts {e} % model axis {ntp} != 0"
+    if e % ntp:
+        raise ValueError(f"experts {e} % model axis {ntp} != 0")
     e_loc = e // ntp
     ndp = 1
     for a in dp:
@@ -202,7 +203,8 @@ def _dispatch_ragged_ep_decode(params, xt, topi, topw, cfg, mesh):
     dp = layers.dp_spec()
     tp = layers.tp_spec()
     ntp = mesh.shape[tp]
-    assert e % ntp == 0
+    if e % ntp:
+        raise ValueError(f"experts {e} % model axis {ntp} != 0")
     e_loc = e // ntp
     ndp = 1
     for a in dp:

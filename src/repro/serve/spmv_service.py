@@ -372,7 +372,9 @@ class SpMVService:
         t_flush = time.perf_counter()
         with obs.span("flush") as flush_sp:
             results = self._flush_inner(flush_sp)
-        self._m_flush.observe(time.perf_counter() - t_flush)
+        dt_flush = time.perf_counter() - t_flush
+        with self._lock:
+            self._m_flush.observe(dt_flush)
         return results
 
     def _flush_inner(self, flush_sp) -> dict[int, SpMVResult]:
@@ -485,7 +487,7 @@ class SpMVService:
         while len(self._results) > self.max_stored_results:
             _, old = self._results.popitem(last=False)
             owner = old.owner or "unknown"
-            self._m_dropped.inc(owner=owner)
+            self._m_dropped.inc(owner=owner)  # repro-lint: disable=stat-lock
             obs.instant("result-dropped", ticket=old.ticket, owner=owner)
             log.warning(
                 "spmv_result_dropped ticket=%d owner=%s matrix_batch=%d "

@@ -1,0 +1,558 @@
+"""Static verification subsystem: verifier mutation tests + lint fixtures.
+
+Two halves, mirroring ``src/repro/analysis``:
+
+* **Verifier** — a deterministic fuzz sweep (COO × spec × dtype plans must
+  verify clean, with the source COO as ground truth) plus targeted
+  *mutation* tests: each corrupts one well-formed stream in one way and
+  asserts the matching rule fires with the right rule id and location.
+  The verifier is encoder-independent, so these mutations are exactly the
+  corruptions a broken encoder / splice / eviction path could produce.
+* **Linter** — fixture sources for every repo rule proving a
+  true-positive, the negative (idiomatic) form staying clean, and the
+  per-line suppression syntax.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.analysis import (Diagnostics, VerificationError, lint_source,
+                            verify_matrix, verify_plan)
+from repro.analysis.rules import ALL_RULES
+from repro.core import format as F
+from repro.core import partition as PT
+from repro.data import matrices as M
+
+CFG = F.SerpensConfig(segment_width=128, lanes=8, sublanes=4, raw_window=4)
+SPILL = F.SerpensConfig(segment_width=128, lanes=8, sublanes=4,
+                        raw_window=2, spill_hot_rows=True, lane_balance=1.1)
+
+
+def build(m=200, k=300, nnz=2000, cfg=CFG, seed=0, gen=M.uniform_random):
+    if gen is M.uniform_random:
+        rows, cols, vals = gen(m, k, nnz, seed=seed)
+    else:
+        rows, cols, vals = gen(m, nnz, seed=seed)
+        k = m
+    sm = F.encode(rows, cols, vals, (m, k), cfg)
+    return rows, cols, vals, sm
+
+
+def mutate(sm, **arrays):
+    """Copy of ``sm`` with the given arrays replaced (originals untouched)."""
+    fresh = {f: np.array(getattr(sm, f))
+             for f in ("idx", "val", "seg_ids")}
+    fresh.update(arrays)
+    return dataclasses.replace(sm, **fresh)
+
+
+def fired(diags: Diagnostics, rule: str):
+    hits = diags.by_rule(rule)
+    assert hits, (f"expected rule {rule!r} to fire; got "
+                  f"{diags.rules_fired() or 'nothing'}:\n{diags.format()}")
+    return hits
+
+
+class TestVerifierClean:
+    """Well-formed encoder output must verify clean — the fuzz oracle."""
+
+    @pytest.mark.parametrize("cfg", [CFG, SPILL])
+    @pytest.mark.parametrize("gen", [M.uniform_random, M.power_law_graph])
+    def test_matrix_clean(self, cfg, gen):
+        rows, cols, vals, sm = build(cfg=cfg, gen=gen)
+        d = verify_matrix(sm, source=(rows, cols, vals))
+        assert d.ok, d.format()
+
+    @pytest.mark.parametrize("spec", [
+        PT.PlanSpec("single", 1), PT.PlanSpec("row", 2),
+        PT.PlanSpec("col", 2), PT.PlanSpec("row", 4, lane_assign="balanced"),
+        PT.PlanSpec("single", 1, lane_assign="balanced"),
+    ])
+    @pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+    def test_plan_clean(self, spec, dtype):
+        cfg = dataclasses.replace(SPILL, value_dtype=dtype)
+        rows, cols, vals = M.power_law_graph(240, 2400, seed=11)
+        plan = PT.make_plan(rows, cols, vals, (240, 240), cfg, spec)
+        d = verify_plan(plan, rows, cols, vals)
+        assert d.ok, d.format()
+
+    def test_fuzz_sweep_clean(self):
+        """Deterministic random sweep: random geometry x random COO."""
+        rng = np.random.default_rng(42)
+        for trial in range(12):
+            m = int(rng.integers(20, 300))
+            k = int(rng.integers(20, 300))
+            nnz = int(rng.integers(0, 4 * max(m, k)))
+            cfg = F.SerpensConfig(
+                segment_width=int(rng.choice([32, 48, 128])),
+                lanes=int(rng.choice([4, 8])),
+                sublanes=int(rng.choice([2, 4])),
+                raw_window=int(rng.integers(1, 6)),
+                spill_hot_rows=bool(rng.integers(0, 2)),
+                lane_balance=float(rng.choice([0.0, 1.1])))
+            part, nsh = [("single", 1), ("row", 2),
+                         ("col", 3)][int(rng.integers(0, 3))]
+            assign = ("modulo", "balanced")[int(rng.integers(0, 2))]
+            rows = rng.integers(0, m, nnz)
+            cols = rng.integers(0, k, nnz)
+            vals = rng.normal(size=nnz).astype(np.float32)
+            plan = PT.make_plan(rows, cols, vals, (m, k), cfg,
+                                PT.PlanSpec(part, nsh, assign))
+            d = verify_plan(plan, rows, cols, vals)
+            assert d.ok, f"trial {trial}: {d.format()}"
+
+
+class TestVerifierMutations:
+    """Each stream corruption must fire its rule, with a usable location."""
+
+    def test_seg_monotone(self):
+        _, _, _, sm = build()
+        seg = np.array(sm.seg_ids)
+        assert seg[-1] > seg[0]
+        seg[0], seg[-1] = seg[-1], seg[0]
+        hits = fired(verify_matrix(mutate(sm, seg_ids=seg)), "seg-monotone")
+        assert hits[0].slot is not None
+
+    def test_raw_window_clone(self):
+        _, _, _, sm = build()
+        idx, val = np.array(sm.idx), np.array(sm.val)
+        t, s, lane = [int(x) for x in np.argwhere(
+            (idx[:, :-1, :] != F.SENTINEL))[0]]
+        idx[t, s + 1, lane] = idx[t, s, lane]   # clone row inside window
+        val[t, s + 1, lane] = 1.0
+        hits = fired(verify_matrix(mutate(sm, idx=idx, val=val)),
+                     "raw-window")
+        assert hits[0].lane == lane
+
+    def test_lane_capacity(self):
+        _, _, _, sm = build()
+        idx = np.array(sm.idx)
+        t, s, lane = [int(x) for x in np.argwhere(idx != F.SENTINEL)[0]]
+        cap = -(-sm.shape[0] // CFG.lanes)
+        idx[t, s, lane] = np.int32(((cap + 5) << 16) | 3)
+        hits = fired(verify_matrix(mutate(sm, idx=idx)), "lane-capacity")
+        assert hits[0].lane == lane and hits[0].slot == t
+
+    def test_sentinel_reserved_row(self):
+        cfg = F.SerpensConfig(segment_width=1 << 16, lanes=4, sublanes=4,
+                              raw_window=2)
+        _, _, _, sm = build(m=40, k=200, nnz=300, cfg=cfg)
+        idx = np.array(sm.idx)
+        t, s, lane = [int(x) for x in np.argwhere(idx != F.SENTINEL)[0]]
+        # row 0xFFFF, col 5 — not the all-ones sentinel, but the row
+        # aliases it in 16 bits.  (Cast via uint32: the packed word's sign
+        # bit is set.)
+        idx[t, s, lane] = np.uint32((0xFFFF << 16) | 5).astype(np.int32)
+        fired(verify_matrix(mutate(sm, idx=idx), mode="fast"), "sentinel")
+
+    def test_sentinel_padding_value(self):
+        _, _, _, sm = build()
+        idx, val = np.array(sm.idx), np.array(sm.val)
+        t, s, lane = [int(x) for x in np.argwhere(idx == F.SENTINEL)[0]]
+        val[t, s, lane] = 7.0   # a kernel epilogue would scatter-add this
+        fired(verify_matrix(mutate(sm, val=val)), "sentinel")
+
+    def test_col_range(self):
+        _, _, _, sm = build()
+        idx = np.array(sm.idx)
+        t, s, lane = [int(x) for x in np.argwhere(idx != F.SENTINEL)[0]]
+        rr = int(idx[t, s, lane]) >> 16 & 0xFFFF
+        idx[t, s, lane] = np.int32((rr << 16) | CFG.segment_width)
+        hits = fired(verify_matrix(mutate(sm, idx=idx)), "col-range")
+        assert hits[0].slot == t
+
+    def test_nnz_account_dropped_entry(self):
+        _, _, _, sm = build()
+        idx, val = np.array(sm.idx), np.array(sm.val)
+        t, s, lane = [int(x) for x in np.argwhere(idx != F.SENTINEL)[0]]
+        idx[t, s, lane] = F.SENTINEL
+        val[t, s, lane] = 0.0
+        fired(verify_matrix(mutate(sm, idx=idx, val=val)), "nnz-account")
+
+    def test_spill_legal_aux_out_of_range(self):
+        _, _, _, sm = build(cfg=SPILL, gen=M.power_law_graph)
+        assert sm.n_aux > 0, "fixture needs actual spills"
+        aux = np.array(sm.aux_rows)
+        aux[0] = sm.shape[0] + 7
+        hits = fired(verify_matrix(mutate(sm, aux_rows=aux), mode="fast"),
+                     "spill-legal")
+        assert hits[0].slot == 0
+
+    def test_spill_legal_disabled_config(self):
+        _, _, _, sm = build()
+        bad = mutate(sm,
+                     aux_rows=np.array([1], np.int32),
+                     aux_cols=np.array([1], np.int32),
+                     aux_vals=np.array([1.0], np.float32))
+        bad.nnz += 1   # keep nnz-account quiet; spill itself is the crime
+        fired(verify_matrix(bad, mode="fast"), "spill-legal")
+
+    def test_spill_cap_hot_row_kept(self):
+        # One 60-entry row encoded WITHOUT spill, then audited as if the
+        # config had promised hot-row spill: the whole row sits in one
+        # (segment, lane) bucket, far over max(1, 60 // raw_window).
+        rows = np.zeros(60, np.int64)
+        cols = np.arange(60, dtype=np.int64)
+        vals = np.ones(60, np.float32)
+        cfg = F.SerpensConfig(segment_width=128, lanes=8, sublanes=4,
+                              raw_window=2)
+        sm = F.encode(rows, cols, vals, (16, 128), cfg)
+        lying = dataclasses.replace(
+            sm, config=dataclasses.replace(cfg, spill_hot_rows=True))
+        hits = fired(verify_matrix(lying), "spill-cap")
+        assert hits[0].lane == 0
+
+    def test_round_trip_value(self):
+        rows, cols, vals, sm = build()
+        val = np.array(sm.val)
+        t, s, lane = [int(x) for x in np.argwhere(
+            np.array(sm.idx) != F.SENTINEL)[0]]
+        val[t, s, lane] = val[t, s, lane] * 2 + 1
+        fired(verify_matrix(mutate(sm, val=val),
+                            source=(rows, cols, vals)), "round-trip")
+
+    def test_lane_ownership_swapped_lanes(self):
+        rows, cols, vals, sm = build(gen=M.power_law_graph)
+        idx, val = np.array(sm.idx), np.array(sm.val)
+        live = idx != F.SENTINEL
+        counts = live.sum(axis=(0, 1))
+        a, b = int(np.argmax(counts)), int(np.argmin(counts))
+        assert counts[a] != counts[b]
+        idx[:, :, [a, b]] = idx[:, :, [b, a]]
+        val[:, :, [a, b]] = val[:, :, [b, a]]
+        hits = fired(verify_matrix(mutate(sm, idx=idx, val=val),
+                                   source=(rows, cols, vals)),
+                     "lane-ownership")
+        assert hits[0].lane in (a, b)
+
+    def test_row_perm_not_injective(self):
+        rows, cols, vals = M.power_law_graph(240, 2400, seed=1)
+        plan = PT.make_plan(rows, cols, vals, (240, 240), SPILL,
+                            PT.PlanSpec("single", 1,
+                                        lane_assign="balanced"))
+        perm = np.array(plan.row_perm)
+        perm[1] = perm[0]
+        plan.row_perm = perm
+        fired(verify_plan(plan), "row-perm")
+
+    def test_row_perm_unexpected_on_modulo(self):
+        rows, cols, vals, _ = build()
+        plan = PT.make_plan(rows, cols, vals, (200, 300), CFG,
+                            PT.PlanSpec("row", 2))
+        plan.row_perm = np.arange(200, dtype=np.int64)
+        fired(verify_plan(plan), "row-perm")
+
+    def test_row_perm_cross_block(self):
+        rows, cols, vals = M.power_law_graph(240, 2400, seed=2)
+        plan = PT.make_plan(rows, cols, vals, (240, 240), SPILL,
+                            PT.PlanSpec("row", 2, lane_assign="balanced"))
+        perm = np.array(plan.row_perm)
+        in_b0 = np.flatnonzero(perm < plan.block_m)[0]
+        in_b1 = np.flatnonzero(perm >= plan.block_m)[0]
+        perm[[in_b0, in_b1]] = perm[[in_b1, in_b0]]
+        plan.row_perm = perm
+        fired(verify_plan(plan), "row-perm")
+
+    def test_byte_account_wrong_dtype(self):
+        _, _, _, sm = build()
+        fired(verify_matrix(mutate(sm, val=np.array(sm.val, np.float64)),
+                            mode="fast"), "byte-account")
+
+    def test_shape_static_truncated_seg_ids(self):
+        _, _, _, sm = build()
+        fired(verify_matrix(mutate(sm, seg_ids=np.array(sm.seg_ids[:-1])),
+                            mode="fast"), "shape-static")
+
+    def test_shape_static_chunk_misalignment(self):
+        cfg = dataclasses.replace(CFG, tiles_per_chunk=2)
+        _, _, _, sm = build(cfg=cfg)
+        bad = mutate(sm, idx=np.array(sm.idx[:-1]),
+                     val=np.array(sm.val[:-1]),
+                     seg_ids=np.array(sm.seg_ids[:-1]))
+        fired(verify_matrix(bad, mode="fast"), "shape-static")
+
+    def test_shard_coverage_wrong_block(self):
+        rows, cols, vals, _ = build()
+        plan = PT.make_plan(rows, cols, vals, (200, 300), CFG,
+                            PT.PlanSpec("row", 2))
+        plan.block_m += CFG.lanes
+        fired(verify_plan(plan), "shard-coverage")
+
+    def test_stack_consistent_corrupt_stack(self):
+        rows, cols, vals, _ = build()
+        plan = PT.make_plan(rows, cols, vals, (200, 300), CFG,
+                            PT.PlanSpec("row", 2))
+        stacked = np.array(plan.idx)
+        stacked[0, 0, 0, 0] ^= np.int32(1)
+        plan.idx = stacked
+        hits = fired(verify_plan(plan), "stack-consistent")
+        assert hits[0].shard == 0
+
+
+class TestCheckInvariantsWrapper:
+    """format.check_invariants keeps its assert contract over the verifier."""
+
+    def test_clean_passes(self):
+        rows, cols, vals, sm = build(cfg=SPILL, gen=M.power_law_graph)
+        F.check_invariants(sm)
+        F.check_invariants(sm, source=(rows, cols, vals))
+
+    def test_raises_assertion_error_with_all_findings(self):
+        _, _, _, sm = build()
+        seg = np.array(sm.seg_ids)
+        seg[0], seg[-1] = seg[-1], seg[0]
+        with pytest.raises(AssertionError, match="seg-monotone"):
+            F.check_invariants(mutate(sm, seg_ids=seg))
+
+    def test_covers_aux_stream(self):
+        _, _, _, sm = build(cfg=SPILL, gen=M.power_law_graph)
+        assert sm.n_aux > 0
+        aux = np.array(sm.aux_rows)
+        aux[0] = sm.shape[0] + 1
+        with pytest.raises(AssertionError, match="spill-legal"):
+            F.check_invariants(mutate(sm, aux_rows=aux))
+
+    def test_covers_row_perm(self):
+        _, _, _, sm = build()
+        with pytest.raises(AssertionError, match="row-perm"):
+            F.check_invariants(sm, row_perm=np.zeros(5, np.int64) + 10**9)
+
+
+class TestRegistryVerifyGate:
+    def _registry(self, **kw):
+        from repro.core.registry import MatrixRegistry
+        return MatrixRegistry(**kw)
+
+    def test_clean_put_passes_all_modes(self):
+        rows, cols, vals = M.power_law_graph(120, 900, seed=3)
+        reg = self._registry(verify="full")
+        assert reg.put(rows, cols, vals, (120, 120), num_shards=2,
+                       partition="row")
+        assert reg.put(rows, cols, vals, (120, 120), verify="fast",
+                       lane_assign="balanced", config=SPILL)
+
+    def test_bad_plan_rejected(self, monkeypatch):
+        import repro.core.parallel_encode as penc
+
+        orig = penc.prepare_and_plan
+
+        def corrupting(*args, **kw):
+            prep, plan = orig(*args, **kw)
+            seg = np.array(plan.shards[0].seg_ids)
+            if seg.size > 1:
+                seg[0], seg[-1] = seg[-1], seg[0]
+            plan.shards[0].seg_ids = seg
+            plan.seg_ids = seg[None]
+            return prep, plan
+
+        monkeypatch.setattr(penc, "prepare_and_plan", corrupting)
+        import repro.core.registry as R
+        monkeypatch.setattr(R.penc, "prepare_and_plan", corrupting)
+        rows, cols, vals = M.uniform_random(64, 600, 800, seed=4)
+        reg = self._registry(config=CFG)   # W=128 → 5 segments to scramble
+        with pytest.raises(VerificationError, match="seg-monotone"):
+            reg.put(rows, cols, vals, (64, 600), verify="fast")
+        # verify="off" lets the same corrupted plan through (debug gate).
+        assert reg.put(rows, cols, vals, (64, 600), verify="off")
+
+    def test_invalid_mode_rejected(self):
+        reg = self._registry()
+        rows, cols, vals = M.uniform_random(8, 8, 10, seed=5)
+        with pytest.raises(ValueError, match="verify"):
+            reg.put(rows, cols, vals, (8, 8), verify="paranoid")
+        with pytest.raises(ValueError, match="verify"):
+            self._registry(verify="sometimes")
+
+
+# ---------------------------------------------------------------------------
+# Linter fixtures
+# ---------------------------------------------------------------------------
+
+def lint_str(src, path="src/repro/serve/thing.py"):
+    diags, suppressed = lint_source(src, path, ALL_RULES)
+    return diags, suppressed
+
+
+def rules_of(diags):
+    return {d.rule for d in diags}
+
+
+class TestLintRules:
+    def test_worker_import_true_positive(self):
+        src = "import numpy\nimport jax\nfrom repro import obs\n"
+        diags, _ = lint_str(src, path="src/repro/core/format.py")
+        hits = [d for d in diags if d.rule == "worker-import"]
+        assert len(hits) == 2
+        assert {d.line for d in hits} == {2, 3}
+        # obs modules may not import jax at module scope either:
+        diags, _ = lint_str("import jax.numpy as jnp\n",
+                            path="src/repro/obs/trace.py")
+        assert rules_of(diags) == {"worker-import"}
+
+    def test_worker_import_negatives(self):
+        # Function-scope (deferred) imports are the sanctioned pattern, and
+        # non-worker modules may import jax freely.
+        src = "def f():\n    import jax\n    return jax\n"
+        diags, _ = lint_str(src, path="src/repro/core/format.py")
+        assert not diags.findings
+        diags, _ = lint_str("import jax\n",
+                            path="src/repro/kernels/serpens_spmv.py")
+        assert not diags.findings
+
+    def test_lock_blocking_call_true_positive(self):
+        src = ("class S:\n"
+               "    def f(self, x):\n"
+               "        with self._lock:\n"
+               "            y = self.op.matvec(x)\n"
+               "        return y\n")
+        diags, _ = lint_str(src)
+        hits = [d for d in diags if d.rule == "lock-blocking-call"]
+        assert hits and hits[0].line == 4
+
+    def test_lock_blocking_call_cv_wait_idiom_ok(self):
+        src = ("class S:\n"
+               "    def f(self):\n"
+               "        with self._result_cv:\n"
+               "            self._result_cv.wait(1.0)\n")
+        diags, _ = lint_str(src)
+        assert "lock-blocking-call" not in rules_of(diags)
+        # ...but waiting on anything else under the lock is flagged.
+        src = ("class S:\n"
+               "    def f(self, ev):\n"
+               "        with self._lock:\n"
+               "            ev.wait()\n")
+        diags, _ = lint_str(src)
+        assert "lock-blocking-call" in rules_of(diags)
+
+    def test_lock_blocking_call_outside_lock_ok(self):
+        src = ("class S:\n"
+               "    def f(self, x):\n"
+               "        with self._lock:\n"
+               "            op = self.op\n"
+               "        return op.matvec(x)\n")
+        diags, _ = lint_str(src)
+        assert "lock-blocking-call" not in rules_of(diags)
+
+    def test_stat_lock_true_positive(self):
+        src = ("import threading\n"
+               "class S:\n"
+               "    def __init__(self):\n"
+               "        self._lock = threading.Lock()\n"
+               "    def f(self):\n"
+               "        self._m_requests.inc()\n"
+               "        self.stats.hits += 1\n")
+        diags, _ = lint_str(src)
+        hits = [d for d in diags if d.rule == "stat-lock"]
+        assert len(hits) == 2 and hits[0].line == 6
+
+    def test_stat_lock_under_lock_ok(self):
+        src = ("import threading\n"
+               "class S:\n"
+               "    def __init__(self):\n"
+               "        self._lock = threading.Lock()\n"
+               "    def f(self):\n"
+               "        with self._lock:\n"
+               "            self._m_requests.inc()\n"
+               "            self.stats.hits += 1\n")
+        diags, _ = lint_str(src)
+        assert "stat-lock" not in rules_of(diags)
+
+    def test_stat_lock_lockless_class_ignored(self):
+        src = ("class S:\n"
+               "    def f(self):\n"
+               "        self._m_requests.inc()\n")
+        diags, _ = lint_str(src)
+        assert "stat-lock" not in rules_of(diags)
+
+    def test_span_context_true_positive(self):
+        src = ("def f():\n"
+               "    obs.span('encode')\n"   # created, never entered
+               "    return 1\n")
+        diags, _ = lint_str(src)
+        hits = [d for d in diags if d.rule == "span-context"]
+        assert hits and hits[0].line == 2
+
+    def test_span_context_negatives(self):
+        src = ("def f():\n"
+               "    with obs.span('encode') as sp:\n"
+               "        pass\n"
+               "    stack.enter_context(obs.span('late'))\n")
+        diags, _ = lint_str(src)
+        assert "span-context" not in rules_of(diags)
+
+    def test_bare_assert_true_positive(self):
+        diags, _ = lint_str("def f(x):\n    assert x > 0\n    return x\n")
+        hits = [d for d in diags if d.rule == "bare-assert"]
+        assert hits and hits[0].line == 2
+
+    def test_frozen_mutation_true_positive(self):
+        src = ("def f(prep, sm, plan):\n"
+               "    prep.rows[0] = 1\n"
+               "    sm.val = None\n"
+               "    plan.idx[0] += 1\n")
+        diags, _ = lint_str(src)
+        hits = [d for d in diags if d.rule == "frozen-mutation"]
+        assert len(hits) == 3
+
+    def test_frozen_mutation_negatives(self):
+        src = ("def f(rows, entry, sm):\n"
+               "    rows[0] = 1\n"            # plain local array
+               "    entry.prepared = None\n"  # registry-owned slot
+               "    sm.num_segments = 4\n"    # not a stream array
+               "    x = sm.idx[0]\n")         # read, not write
+        diags, _ = lint_str(src)
+        assert "frozen-mutation" not in rules_of(diags)
+
+    def test_suppression_per_line_and_all(self):
+        src = ("def f(x):\n"
+               "    assert x  # repro-lint: disable=bare-assert\n"
+               "    assert x  # repro-lint: disable=all\n"
+               "    assert x\n")
+        diags, suppressed = lint_str(src)
+        assert suppressed == 2
+        hits = [d for d in diags if d.rule == "bare-assert"]
+        assert len(hits) == 1 and hits[0].line == 4
+
+    def test_syntax_error_is_a_finding(self):
+        diags, _ = lint_str("def f(:\n")
+        assert rules_of(diags) == {"syntax"}
+
+    def test_repo_tree_is_clean(self):
+        """The shipped tree lints clean — what the CI analysis job gates."""
+        import os
+        from repro.analysis import lint_paths
+        root = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "src", "repro")
+        diags, _, nfiles = lint_paths([root])
+        assert nfiles > 50
+        assert not diags.findings, diags.format()
+
+
+class TestCli:
+    def test_lint_cli(self, tmp_path, capsys):
+        from repro.analysis.__main__ import main
+        bad = tmp_path / "bad.py"
+        bad.write_text("def f(x):\n    assert x\n")
+        assert main(["lint", str(bad)]) == 1
+        out = capsys.readouterr().out
+        assert "bare-assert" in out
+        good = tmp_path / "good.py"
+        good.write_text("def f(x):\n    return x\n")
+        assert main(["lint", str(good)]) == 0
+
+    def test_lint_list_rules(self, capsys):
+        from repro.analysis.__main__ import main
+        assert main(["lint", "--list-rules"]) == 0
+        out = capsys.readouterr().out
+        for rule in ALL_RULES:
+            assert rule.name in out
+
+    def test_verify_npz(self, tmp_path, capsys):
+        from repro.analysis.__main__ import main
+        rows, cols, vals = M.uniform_random(50, 60, 400, seed=9)
+        npz = tmp_path / "m.npz"
+        np.savez(npz, rows=rows, cols=cols, vals=vals,
+                 shape=np.array([50, 60]))
+        assert main(["verify", "--npz", str(npz)]) == 0
+        assert "OK" in capsys.readouterr().out

@@ -163,7 +163,7 @@ class TestMalformedStreamAsserts:
 
     def test_spmv_rejects_bad_seg_ids(self, stream):
         K, cfg, sm, x2d, _ = stream
-        with pytest.raises(AssertionError):
+        with pytest.raises(ValueError, match="seg_ids"):
             K.spmv_pallas(jnp.asarray(sm.idx), jnp.asarray(sm.val),
                           jnp.asarray(sm.seg_ids[:-1]), jnp.asarray(x2d),
                           num_rows_padded=sm.padded_rows,
@@ -172,7 +172,7 @@ class TestMalformedStreamAsserts:
     def test_spmm_rejects_bad_seg_ids(self, stream):
         K, cfg, sm, _, x3d = stream
         chunk_seg = sm.seg_ids[::cfg.tiles_per_chunk]
-        with pytest.raises(AssertionError):
+        with pytest.raises(ValueError, match="seg_ids"):
             K.spmm_pallas(jnp.asarray(sm.idx), jnp.asarray(sm.val),
                           jnp.asarray(np.append(chunk_seg, 0)),
                           jnp.asarray(x3d),
@@ -182,7 +182,7 @@ class TestMalformedStreamAsserts:
     def test_spmm_rejects_ragged_chunks(self, stream):
         K, cfg, sm, _, x3d = stream
         chunk_seg = sm.seg_ids[::cfg.tiles_per_chunk]
-        with pytest.raises(AssertionError):
+        with pytest.raises(ValueError, match="tiles_per_chunk"):
             K.spmm_pallas(jnp.asarray(sm.idx[:-1]), jnp.asarray(sm.val[:-1]),
                           jnp.asarray(chunk_seg), jnp.asarray(x3d),
                           num_rows_padded=sm.padded_rows,
