@@ -2,7 +2,7 @@
 
 FPGA: Eq. 4 with H_A = 16 → 24 at 270 MHz (the paper's Serpens-v24).
 TPU analog: the 'channel' is a chip — the row-partitioned distributed SpMV
-(core/distributed.py) scales the A-stream bandwidth linearly while x is
+(core/spmv.py) scales the A-stream bandwidth linearly while x is
 replicated, exactly the paper's channel-allocation argument.  We model 1-8
 chips and report the modeled speedups.
 """

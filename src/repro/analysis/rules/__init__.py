@@ -3,6 +3,7 @@ from repro.analysis.rules.asserts import BareAssertRule
 from repro.analysis.rules.imports import WorkerImportRule
 from repro.analysis.rules.locking import LockBlockingCallRule, StatLockRule
 from repro.analysis.rules.mutation import FrozenMutationRule
+from repro.analysis.rules.queues import UnboundedQueueRule
 from repro.analysis.rules.spans import SpanContextRule
 
 ALL_RULES = (
@@ -12,8 +13,9 @@ ALL_RULES = (
     SpanContextRule(),
     BareAssertRule(),
     FrozenMutationRule(),
+    UnboundedQueueRule(),
 )
 
 __all__ = ["ALL_RULES", "WorkerImportRule", "LockBlockingCallRule",
            "StatLockRule", "SpanContextRule", "BareAssertRule",
-           "FrozenMutationRule"]
+           "FrozenMutationRule", "UnboundedQueueRule"]

@@ -1,37 +1,18 @@
-"""Distributed Serpens SpMV — the multi-device scaling path.
+"""Deprecated shim — :class:`ShardedSerpensSpMV` moved to
+:mod:`repro.core.spmv` so the whole execution core lives in one module.
 
-The paper scales by adding HBM channels (Sec. 4.4, 16 → 24 channels, Table
-5).  On a TPU mesh the analogous scaling axes are *chips*.  This used to be
-a separate implementation; it is now a thin wrapper that builds a
-channel-shard plan (:mod:`repro.core.partition`) over the mesh axis and
-executes it through the same :class:`~repro.core.spmv.SerpensOperator` as
-the single-device path — so the aux spill stream, both backends, and matmat
-all work sharded.
+Import from ``repro.core.spmv`` instead; this alias module will be
+removed once downstream imports migrate.
 """
 from __future__ import annotations
 
-from repro.core import format as sformat
-from repro.core import partition as cpart
-from repro.core.spmv import SerpensOperator
+import warnings
 
+from repro.core.spmv import ShardedSerpensSpMV
 
-class ShardedSerpensSpMV(SerpensOperator):
-    """Row- or column-partitioned SpMV over one mesh axis.
+warnings.warn(
+    "repro.core.distributed is deprecated; import ShardedSerpensSpMV "
+    "from repro.core.spmv",
+    DeprecationWarning, stacklevel=2)
 
-      * ``row``: each device owns a contiguous row block and its own stream;
-        x is replicated; outputs concatenate (no inter-device reduction).
-      * ``col``: segments sharded; each device produces a partial full-length
-        y; a ``psum`` combines (for very large K where x must shard).
-    """
-
-    def __init__(self, rows, cols, vals, shape, mesh, axis: str,
-                 partition: str = "row",
-                 config: sformat.SerpensConfig = sformat.SerpensConfig(),
-                 backend: str = "auto"):
-        if partition not in ("row", "col"):
-            raise ValueError("partition must be 'row' or 'col'")
-        plan = cpart.make_plan(
-            rows, cols, vals, shape, config,
-            cpart.PlanSpec(partition, mesh.shape[axis]))
-        super().__init__(plan, mesh=mesh, axis=axis, backend=backend)
-        self.partition = partition
+__all__ = ["ShardedSerpensSpMV"]

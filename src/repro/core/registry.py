@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import logging
 import threading
 import time
 from collections import OrderedDict
@@ -34,6 +35,8 @@ from repro.core import format as sformat
 from repro.core import parallel_encode as penc
 from repro.core import partition as cpart
 from repro.core.spmv import SerpensOperator
+
+log = logging.getLogger("repro.registry")
 
 
 def content_key(rows, cols, vals, shape, config: sformat.SerpensConfig,
@@ -197,6 +200,13 @@ class _PendingEncode:
         default_factory=threading.Event)
     error: BaseException | None = None
     cancelled: bool = False         # evicted/replaced before install
+    # on_ready() callbacks waiting for this encode to settle.  Fired
+    # exactly once (outside the registry lock) when the job finishes —
+    # whether it installed, failed, or was cancelled mid-flight — so an
+    # event-driven consumer (the serving pipeline's parked requests)
+    # never has to poll ready().
+    listeners: list = dataclasses.field(default_factory=list)
+    settled: bool = False           # listeners drained; late adds fire now
 
 
 class MatrixRegistry:
@@ -610,7 +620,7 @@ class MatrixRegistry:
                 obs.instant("encode-failed", cat="registry", error=str(e))
                 with self._lock:
                     pending.error = e
-                pending.done.set()
+                self._settle_pending(pending)
                 return
             with self._lock:
                 cancelled = pending.cancelled
@@ -642,7 +652,42 @@ class MatrixRegistry:
                             del self._entries[key]
                             self._bytes -= entry.total_bytes
                             self.stats.evictions += 1
-            pending.done.set()
+        self._settle_pending(pending)
+
+    def _settle_pending(self, pending: _PendingEncode) -> None:
+        """Mark a background encode finished and fire its listeners.
+
+        ``done`` is set first so blocked waiters wake, then the listener
+        list is drained under the lock (``settled`` flips so a concurrent
+        ``on_ready`` fires immediately instead of registering into a list
+        nobody will drain again) and the callbacks run outside it — a
+        listener is free to call back into the registry.
+        """
+        with self._lock:
+            pending.settled = True
+            listeners, pending.listeners = list(pending.listeners), []
+        pending.done.set()
+        for cb in listeners:
+            try:
+                cb()
+            except Exception:       # noqa: BLE001 — listener bugs are theirs
+                log.exception("on_ready listener failed")
+
+    def on_ready(self, matrix_id: str, callback) -> None:
+        """Invoke ``callback()`` once ``matrix_id``'s background encode
+        settles — installed, failed, or cancelled (poll :meth:`ready` to
+        tell which).  Fires immediately (on the calling thread) when no
+        encode is pending; otherwise fires exactly once on the encode
+        worker thread.  This is what lets the serving pipeline park a
+        request submitted against a cold matrix and re-enter it on the
+        event instead of polling at every flush.
+        """
+        with self._lock:
+            pending = self._pending.get(matrix_id)
+            if pending is not None and not pending.settled:
+                pending.listeners.append(callback)
+                return
+        callback()
 
     def ready(self, matrix_id: str) -> bool:
         """Poll a background put: True once the entry serves, False while

@@ -381,3 +381,31 @@ def from_dense(a: np.ndarray, config=sformat.SerpensConfig(),
                backend="auto") -> SerpensSpMV:
     rows, cols = np.nonzero(a)
     return SerpensSpMV(rows, cols, a[rows, cols], a.shape, config, backend)
+
+
+class ShardedSerpensSpMV(SerpensOperator):
+    """Row- or column-partitioned SpMV over one mesh axis.
+
+    The paper scales by adding HBM channels (Sec. 4.4, 16 → 24 channels,
+    Table 5); on a TPU mesh the analogous scaling axis is *chips*.  This
+    builds a channel-shard plan over the mesh axis and executes it through
+    the same :class:`SerpensOperator` as the single-device path — the aux
+    spill stream, both backends, and matmat all work sharded.
+
+      * ``row``: each device owns a contiguous row block and its own stream;
+        x is replicated; outputs concatenate (no inter-device reduction).
+      * ``col``: segments sharded; each device produces a partial full-length
+        y; a ``psum`` combines (for very large K where x must shard).
+    """
+
+    def __init__(self, rows, cols, vals, shape, mesh, axis: str,
+                 partition: str = "row",
+                 config: sformat.SerpensConfig = sformat.SerpensConfig(),
+                 backend: str = "auto"):
+        if partition not in ("row", "col"):
+            raise ValueError("partition must be 'row' or 'col'")
+        plan = cpart.make_plan(
+            rows, cols, vals, shape, config,
+            cpart.PlanSpec(partition, mesh.shape[axis]))
+        super().__init__(plan, mesh=mesh, axis=axis, backend=backend)
+        self.partition = partition

@@ -1,118 +1,37 @@
-"""SpMV serving: request micro-batcher over the matrix registry.
+"""SpMV serving façade — the micro-batcher API over the staged pipeline.
 
-The paper's cost model (Sec. 2.2) makes the serving strategy obvious: one
-SpMV streams all of A (8 B/nnz at fp32 values, 6 B/nnz at bf16) to touch
-each x element once, so A-traffic dominates.  Sextans' multi-vector contrast — and this repo's ``matmat`` —
-amortizes a single A-stream over N vectors, cutting stream-bytes/vector by
-N×.  ``SpMVService`` productizes that: callers submit independent
-``(matrix_id, x, alpha, beta)`` requests; ``flush`` coalesces same-matrix
-requests into SpMM calls whose width is padded to a power of two (bounding
-the set of compiled shapes), dispatches through the existing backends, and
-applies each request's private (α, β) epilogue column-wise.
+The serving engine itself lives in :mod:`repro.serve.pipeline` as an
+explicit four-stage pipeline (admission → coalesce → dispatch → collect);
+this module keeps the original service surface — ``submit`` / ``flush`` /
+``result`` / ``serve`` / ``snapshot`` — as a thin subclass.  With no
+dispatcher running (the default), every ``flush()`` drives the stages
+synchronously on the calling thread, which is bit-for-bit the historical
+micro-batcher behavior; call :meth:`SpMVService.start` (or use the
+service as a context manager) to switch the same object into pipelined
+mode, where host-side coalescing overlaps device execution and ``flush``
+becomes a drain barrier.
 
-Observability: every request's lifecycle is traced (``obs.span`` +
-per-ticket flow arrows submit → dispatch → collect, visible in Perfetto),
-and the serving stats are backed by a :class:`~repro.obs.metrics
-.MetricsRegistry` — counters for the aggregate economics, latency
-histograms for the percentiles the SLO story needs.  ``stats`` /
-``stats_snapshot()`` remain the backward-compatible dataclass view over
-those metrics; ``snapshot()`` adds exact p50/p95/p99 dispatch latency.
+The serving economics are unchanged (paper Sec. 2.2): one SpMV streams
+all of A, so ``flush`` coalesces same-matrix requests into SpMM calls
+whose width pads to a power of two, amortizing the A-stream over the
+batch.  See :class:`repro.serve.pipeline.SpMVPipeline` for the stage and
+admission-policy details.
 """
 from __future__ import annotations
 
-import dataclasses
-import logging
-import threading
-import time
-from collections import OrderedDict
+from repro.serve.pipeline import (ADMISSION_POLICIES, AdmissionConfig,
+                                  AdmissionError, AdmissionRejected,
+                                  BATCH_SIZE_BUCKETS, RequestShed,
+                                  ServiceStats, SpMVPipeline, SpMVRequest,
+                                  SpMVResult, bucket_width, log)
 
-import numpy as np
-import jax.numpy as jnp
-
-from repro import obs
-from repro.core.registry import MatrixRegistry
-from repro.kernels import ops as kops
-from repro.obs.metrics import MetricsRegistry
-
-log = logging.getLogger("repro.serve")
-
-# Micro-batch width buckets are small powers of two, so batch-size buckets
-# are too (le-inclusive: a 16-wide batch lands in the 16 bucket).
-BATCH_SIZE_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024)
+__all__ = ["SpMVService", "SpMVPipeline", "SpMVRequest", "SpMVResult",
+           "ServiceStats", "AdmissionConfig", "AdmissionError",
+           "AdmissionRejected", "RequestShed", "ADMISSION_POLICIES",
+           "BATCH_SIZE_BUCKETS", "bucket_width", "log"]
 
 
-def bucket_width(n: int, max_bucket: int) -> int:
-    """Pad a batch width to the next power of two, capped at ``max_bucket``.
-
-    Every distinct (matrix, width) pair costs one XLA compile; power-of-two
-    buckets bound that set to log2(max_bucket)+1 shapes per matrix.
-    """
-    if n < 1:
-        raise ValueError("batch width must be >= 1")
-    w = 1
-    while w < n:
-        w *= 2
-    return min(w, max_bucket)
-
-
-@dataclasses.dataclass
-class SpMVRequest:
-    ticket: int
-    matrix_id: str
-    op: object          # SerpensOperator captured at submit — a later registry
-                        # eviction cannot strand an already-queued request.
-                        # None while the matrix is still background-encoding
-                        # (resolved at flush once the registry reports ready).
-    x: np.ndarray
-    alpha: float
-    beta: float
-    y: np.ndarray | None
-    submit_time: float
-    # Content hash pinned at submit for deferred (op=None) requests: if
-    # the id is re-registered with different data (or updated) before the
-    # request dispatches, it fails explicitly instead of being silently
-    # served against a matrix it was never submitted to.
-    expect_content: str | None = None
-    # Caller identity for per-owner accounting (defaults to the submitting
-    # thread's name): when the bounded result store prunes this request's
-    # uncollected result, the drop is charged to its owner.
-    owner: str | None = None
-
-
-@dataclasses.dataclass
-class SpMVResult:
-    """Per-request outcome + the serving economics of its batch."""
-    ticket: int
-    y: np.ndarray | None
-    latency_s: float          # submit → result materialized
-    batch_size: int           # real requests coalesced in this SpMM call
-    bucket_n: int             # padded width actually dispatched
-    stream_bytes_per_vector: float  # A-stream bytes / real vectors in batch
-    # Set when the request can never complete (e.g. its still-encoding
-    # matrix was evicted, or its background encode failed); ``result()``
-    # re-raises it to the collecting caller.
-    error: BaseException | None = None
-    owner: str | None = None
-
-
-@dataclasses.dataclass
-class ServiceStats:
-    batches: int = 0
-    stream_bytes: int = 0     # total A-stream traffic dispatched
-    vectors: int = 0          # real vectors (= requests) served
-    deferred: int = 0         # requests re-queued at flush (still encoding)
-    results_dropped: int = 0  # uncollected results pruned from the store
-
-    @property
-    def amortized_bytes_per_vector(self) -> float:
-        return self.stream_bytes / self.vectors if self.vectors else 0.0
-
-    @property
-    def mean_batch_size(self) -> float:
-        return self.vectors / self.batches if self.batches else 0.0
-
-
-class SpMVService:
+class SpMVService(SpMVPipeline):
     """Micro-batching front-end for registry-resident sparse matrices.
 
     Usage::
@@ -124,511 +43,8 @@ class SpMVService:
         t2 = svc.submit(mid, x2, alpha=2.0)
         results = svc.flush()          # one SpMM for both requests
         y1 = results[t1].y
+
+    This is :class:`~repro.serve.pipeline.SpMVPipeline` under its
+    original name; everything — constructor signature included — is
+    inherited.
     """
-
-    def __init__(self, registry: MatrixRegistry, max_bucket: int = 16,
-                 backend: str | None = None, mesh=None,
-                 axis: str | None = None, partition: str | None = None,
-                 max_stored_results: int = 4096,
-                 metrics: MetricsRegistry | None = None,
-                 retune_every: int = 16):
-        if max_bucket < 1 or max_bucket & (max_bucket - 1):
-            raise ValueError("max_bucket must be a power of two >= 1")
-        if mesh is not None and axis is None:
-            raise ValueError("mesh requires axis")
-        if mesh is None and partition is not None:
-            raise ValueError("partition requires mesh")
-        if max_stored_results < 1:
-            raise ValueError("max_stored_results must be >= 1")
-        if retune_every < 0:
-            raise ValueError("retune_every must be >= 0")
-        self.registry = registry
-        self.max_bucket = max_bucket
-        # A backend override is resolved exactly once here ("auto" →
-        # concrete), never per dispatch; None defers to each operator's
-        # own bind-time choice.
-        self.backend = (None if backend is None
-                        else kops.resolve_backend(backend))
-        # Auto-tuned matrices feed observed slots/s back to the registry's
-        # tuner after every dispatch; every `retune_every` observations on
-        # a matrix the registry re-consults the tuner and swaps the plan
-        # if the ranking flipped (0 disables the re-probe cadence).
-        self.retune_every = int(retune_every)
-        self._tune_obs: dict[str, int] = {}
-        # With a mesh, every dispatched SpMM runs the channel-shard plan
-        # under shard_map over `axis` (registry caches the mesh binding).
-        self.mesh = mesh
-        self.axis = axis
-        self.partition = partition
-        # The serving stats live in a MetricsRegistry (private per service
-        # by default, so two services never alias counters; pass
-        # metrics=obs.REGISTRY to scrape several on one page).  The
-        # ServiceStats dataclass remains as the read view (`stats`),
-        # assembled under the service lock so cross-metric ratios never
-        # tear.  Mutations happen under the same lock for the same reason.
-        self.metrics = metrics if metrics is not None else MetricsRegistry()
-        m = self.metrics
-        self._m_batches = m.counter(
-            "spmv_batches_total", "SpMM dispatches")
-        self._m_vectors = m.counter(
-            "spmv_vectors_total", "real vectors (requests) served")
-        self._m_stream_bytes = m.counter(
-            "spmv_stream_bytes_total", "A-stream bytes dispatched")
-        self._m_deferred = m.counter(
-            "spmv_deferred_total",
-            "requests re-queued at flush (matrix still encoding)")
-        self._m_dropped = m.counter(
-            "spmv_results_dropped_total",
-            "uncollected results pruned from the bounded store, by owner")
-        self._m_dispatch_lat = m.histogram(
-            "spmv_dispatch_latency_seconds",
-            "submit -> result-materialized latency per request")
-        self._m_flush = m.histogram(
-            "spmv_flush_seconds", "wall time of each flush() call")
-        self._m_batch_size = m.histogram(
-            "spmv_batch_size", "real requests coalesced per SpMM dispatch",
-            buckets=BATCH_SIZE_BUCKETS, max_samples=0)
-        # submit() is thread-safe, and flush() may run on any thread: each
-        # flush deposits finished results in a completed-results store
-        # keyed by ticket, and every caller collects *its own* tickets via
-        # result() — so one thread's flush cannot swallow another thread's
-        # requests.  Uncollected results beyond max_stored_results are
-        # pruned oldest-first (stats.results_dropped, charged per owner).
-        self._lock = threading.Lock()
-        self._result_cv = threading.Condition(self._lock)
-        self._results: "OrderedDict[int, SpMVResult]" = OrderedDict()
-        self.max_stored_results = int(max_stored_results)
-        self._pending: list[SpMVRequest] = []
-        self._next_ticket = 0
-
-    # -- submission -------------------------------------------------------
-    def submit(self, matrix_id: str, x, alpha: float = 1.0,
-               beta: float = 0.0, y=None, owner: str | None = None) -> int:
-        """Queue one ``y_out = α·A·x + β·y`` request; returns a ticket.
-
-        Matrices still encoding in the background (``put(blocking=False)``)
-        are accepted without blocking: the request queues with no operator
-        and resolves at a later ``flush`` once the registry reports the
-        entry ready — the dispatcher thread never stalls on a cold start.
-
-        ``owner`` names the caller for per-owner drop accounting (default:
-        the submitting thread's name).
-        """
-        with obs.span("submit", matrix=matrix_id):
-            expect = None
-            if self.registry.ready(matrix_id):  # KeyError when unknown
-                op = self.registry.get(         # refreshes LRU
-                    matrix_id, mesh=self.mesh, axis=self.axis,
-                    partition=self.partition)
-                m_len, k_len = op.shape
-            else:
-                op = None                       # resolved at flush time
-                m_len, k_len = self.registry.shape(matrix_id)
-                expect = self.registry.content(matrix_id)
-            # Copy on enqueue: the caller may reuse/mutate its buffer before
-            # flush (np.asarray would alias an already-float32 input).
-            # Boundary dtype policy (same as SerpensOperator): floating
-            # inputs cast to fp32 here, non-floating inputs are a bug.
-            x = np.asarray(x)
-            if not np.issubdtype(x.dtype, np.floating):
-                raise TypeError(
-                    f"x must have a floating dtype, got {x.dtype} (cast "
-                    f"explicitly if an integer input is intentional)")
-            x = np.array(x, np.float32)
-            if x.ndim != 1 or x.shape[0] != k_len:
-                raise ValueError(
-                    f"x has shape {x.shape}; matrix {matrix_id!r} needs a "
-                    f"length-{k_len} vector")
-            if beta != 0.0 and y is None:
-                raise ValueError("beta != 0 requires y")
-            if y is not None:
-                if not np.issubdtype(np.asarray(y).dtype, np.floating):
-                    raise TypeError(
-                        f"y must have a floating dtype, got "
-                        f"{np.asarray(y).dtype}")
-                y = np.array(y, np.float32)
-                if y.shape != (m_len,):
-                    raise ValueError(
-                        f"y has shape {y.shape}; expected ({m_len},)")
-            if owner is None:
-                owner = threading.current_thread().name
-            with self._lock:
-                ticket = self._next_ticket
-                self._next_ticket += 1
-                self._pending.append(SpMVRequest(
-                    ticket=ticket, matrix_id=matrix_id, op=op, x=x,
-                    alpha=float(alpha), beta=float(beta), y=y,
-                    submit_time=time.perf_counter(), expect_content=expect,
-                    owner=owner))
-            obs.flow_start("request", ticket, matrix=matrix_id)
-        return ticket
-
-    def update(self, matrix_id: str, delta_rows, delta_cols,
-               delta_vals=None, *, mode: str = "add") -> str:
-        """Apply a COO delta to a served matrix (incremental re-encode).
-
-        Versioning is snapshot-at-submit: requests already queued (or
-        in-flight in ``flush``) keep the operator they captured when they
-        were submitted and are served against the pre-update matrix;
-        every submit after this call sees the new version.  The two
-        versions never mix inside one batch — batches group on the
-        operator identity, not the id.  Requests submitted while their
-        matrix was still background-encoding hold no operator yet — they
-        pin the content hash instead, and an update (or re-put) landing
-        before they dispatch fails those tickets explicitly rather than
-        serving a version they were not submitted against.
-        """
-        return self.registry.update(matrix_id, delta_rows, delta_cols,
-                                    delta_vals, mode=mode)
-
-    @property
-    def pending(self) -> int:
-        with self._lock:            # submit/flush mutate under the lock
-            return len(self._pending)
-
-    def _stats_locked(self) -> ServiceStats:
-        """Assemble the dataclass view from the metrics (lock held, so a
-        concurrent dispatch can't land between two counter reads)."""
-        return ServiceStats(
-            batches=int(self._m_batches.total()),
-            stream_bytes=int(self._m_stream_bytes.total()),
-            vectors=int(self._m_vectors.total()),
-            deferred=int(self._m_deferred.total()),
-            results_dropped=int(self._m_dropped.total()))
-
-    @property
-    def stats(self) -> ServiceStats:
-        """Consistent dataclass view over the serving metrics (reads
-        under the lock — cross-metric ratios must never tear)."""
-        with self._lock:
-            return self._stats_locked()
-
-    def stats_snapshot(self) -> ServiceStats:
-        """Alias of :attr:`stats`, kept for API compatibility."""
-        return self.stats
-
-    def results_dropped_by_owner(self) -> dict[str, int]:
-        """{owner: dropped results} — the per-caller loss accounting."""
-        return {(dict(k).get("owner", "unknown")): int(v)
-                for k, v in self._m_dropped.items().items()}
-
-    def snapshot(self) -> dict:
-        """Serving + preprocessing economics in one dict.
-
-        Combines the micro-batcher's amortization stats with the registry's
-        encode-side numbers (wall-time, slot throughput): the host encode is
-        the cold-start cost of every matrix this service fronts, and the
-        incremental update path is its steady-state cost under a changing
-        matrix, so a dashboard wants all three on the same page.  Latency
-        percentiles are exact over the histogram's retained window.
-        """
-        ss = self.stats
-        rs = self.registry.stats_snapshot()   # consistent under the lock
-        lat = self._m_dispatch_lat
-        return {
-            "batches": ss.batches,
-            "vectors": ss.vectors,
-            "mean_batch_size": ss.mean_batch_size,
-            "amortized_bytes_per_vector": ss.amortized_bytes_per_vector,
-            "deferred": ss.deferred,
-            "results_dropped": ss.results_dropped,
-            "results_dropped_by_owner": self.results_dropped_by_owner(),
-            "dispatch_latency_p50": lat.percentile(50),
-            "dispatch_latency_p95": lat.percentile(95),
-            "dispatch_latency_p99": lat.percentile(99),
-            "dispatch_latency_mean": lat.mean,
-            "encodes": rs.encodes,
-            "encode_seconds": rs.encode_seconds,
-            "mean_encode_s": (rs.encode_seconds / rs.encodes
-                              if rs.encodes else 0.0),
-            "encode_slots_per_s": rs.encode_slots_per_s,
-            "background_puts": rs.background_puts,
-            "queue_seconds": rs.queue_seconds,
-            "delta_encodes": rs.delta_encodes,
-            "delta_seconds": rs.delta_seconds,
-            "delta_slots_per_s": rs.delta_slots_per_s,
-            "tuner": (None if self.registry.tuner is None
-                      else self.registry.tuner.snapshot()),
-            "tuner_observations": dict(self._tune_obs),
-        }
-
-    # -- dispatch ---------------------------------------------------------
-    def flush(self) -> dict[int, SpMVResult]:
-        """Dispatch all dispatchable pending requests; returns
-        {ticket: result} for the requests *this call* dispatched.
-
-        Same-matrix requests are coalesced into SpMM calls of at most
-        ``max_bucket`` vectors, padded up to the bucket width with zero
-        columns (padding costs FLOPs, not A-stream traffic — the stream is
-        read once per call regardless of N).
-
-        Requests whose matrix is still background-encoding stay queued for
-        a later flush (``stats.deferred``) — the flushing thread never
-        blocks on a cold start.  Every finished result is also deposited
-        in the completed-results store, so concurrent submitters collect
-        their own tickets via :meth:`result` even when *this* thread's
-        flush dispatched them.
-        """
-        t_flush = time.perf_counter()
-        with obs.span("flush") as flush_sp:
-            results = self._flush_inner(flush_sp)
-        dt_flush = time.perf_counter() - t_flush
-        with self._lock:
-            self._m_flush.observe(dt_flush)
-        return results
-
-    def _flush_inner(self, flush_sp) -> dict[int, SpMVResult]:
-        with self._lock:
-            pending, self._pending = self._pending, []
-        # Resolve requests submitted against matrices that were still
-        # encoding: ready now → bind their operator; still encoding →
-        # re-queue; gone (evicted mid-encode / encode failed) → deposit an
-        # error result for the submitter to collect.
-        ready_reqs: list[SpMVRequest] = []
-        deferred: list[SpMVRequest] = []
-        failed: list[SpMVResult] = []
-        for req in pending:
-            if req.op is None:
-                try:
-                    if not self.registry.ready(req.matrix_id):
-                        deferred.append(req)
-                        continue
-                    op = self.registry.get(
-                        req.matrix_id, mesh=self.mesh, axis=self.axis,
-                        partition=self.partition)
-                    # The request was validated against the *pending*
-                    # matrix at submit; if the id was re-registered or
-                    # updated since (content no longer what it pinned),
-                    # fail this ticket explicitly — never silently serve
-                    # a matrix the caller did not submit against, and
-                    # never let a stale-shaped x poison the whole batch.
-                    if (req.expect_content is not None
-                            and self.registry.content(req.matrix_id)
-                            != req.expect_content):
-                        raise RuntimeError(
-                            f"matrix {req.matrix_id!r} was replaced or "
-                            f"updated while its encode was pending")
-                    if req.x.shape[0] != op.shape[1] or (
-                            req.y is not None
-                            and req.y.shape[0] != op.shape[0]):
-                        raise RuntimeError(
-                            f"matrix {req.matrix_id!r} changed shape to "
-                            f"{op.shape} while its encode was pending")
-                    req.op = op
-                except Exception as e:     # noqa: BLE001 — routed to caller
-                    obs.instant("request-failed", ticket=req.ticket,
-                                matrix=req.matrix_id, error=str(e))
-                    failed.append(SpMVResult(
-                        ticket=req.ticket, y=None, latency_s=0.0,
-                        batch_size=0, bucket_n=0,
-                        stream_bytes_per_vector=0.0, error=e,
-                        owner=req.owner))
-                    continue
-            ready_reqs.append(req)
-        if deferred or failed:
-            with self._result_cv:
-                if deferred:
-                    self._pending[:0] = deferred
-                    self._m_deferred.add(len(deferred))
-                for res in failed:
-                    self._deposit(res)
-                self._result_cv.notify_all()
-            for req in deferred:
-                obs.instant("request-deferred", ticket=req.ticket,
-                            matrix=req.matrix_id)
-        # Coalesce on the operator captured at submit time: still valid even
-        # if the registry evicted the id since, and two requests only share
-        # a batch when they truly share a matrix (an id re-registered with
-        # new content mid-queue lands in its own group).
-        with obs.span("coalesce", requests=len(ready_reqs)) as co_sp:
-            groups: dict[int, list[SpMVRequest]] = {}
-            for req in ready_reqs:
-                groups.setdefault(id(req.op), []).append(req)
-            batches = [reqs[i:i + self.max_bucket]
-                       for reqs in groups.values()
-                       for i in range(0, len(reqs), self.max_bucket)]
-            co_sp.args["batches"] = len(batches)
-        flush_sp.args.update(requests=len(pending), batches=len(batches),
-                             deferred=len(deferred))
-        results: dict[int, SpMVResult] = {}
-        for bi, batch in enumerate(batches):
-            try:
-                self._dispatch(batch[0].op, batch, results)
-            except Exception:
-                # The exception discards `results`, so requests from already-
-                # dispatched batches would be stranded too: re-queue every
-                # batch (SpMV is pure — re-dispatch on the next flush is
-                # safe) and roll back the served batches' stats, atomically
-                # with the re-queue so a concurrent snapshot never sees the
-                # half-rolled-back state.
-                with self._lock:
-                    for done in batches[:bi]:
-                        self._m_batches.add(-1)
-                        self._m_vectors.add(-len(done))
-                        self._m_stream_bytes.add(-done[0].op.stream_bytes)
-                    self._pending[:0] = [r for b in batches for r in b]
-                obs.instant("flush-failed", batches_rolled_back=bi)
-                raise
-        with self._result_cv:
-            for res in results.values():
-                self._deposit(res)
-            self._result_cv.notify_all()
-        return results
-
-    def _deposit(self, res: SpMVResult) -> None:
-        """Store a finished result for result() pickup (lock held).
-
-        Pruning an uncollected result is silent data loss for its caller,
-        so every prune is charged to the dropped ticket's owner
-        (``spmv_results_dropped_total{owner=...}``) and logged as a
-        structured warning — visible long before per-caller queues land.
-        """
-        self._results[res.ticket] = res
-        while len(self._results) > self.max_stored_results:
-            _, old = self._results.popitem(last=False)
-            owner = old.owner or "unknown"
-            self._m_dropped.inc(owner=owner)  # repro-lint: disable=stat-lock
-            obs.instant("result-dropped", ticket=old.ticket, owner=owner)
-            log.warning(
-                "spmv_result_dropped ticket=%d owner=%s matrix_batch=%d "
-                "stored=%d max_stored_results=%d",
-                old.ticket, owner, old.batch_size, len(self._results),
-                self.max_stored_results)
-
-    def result(self, ticket: int, timeout: float | None = None
-               ) -> SpMVResult:
-        """Collect (and remove) one ticket's result from the store.
-
-        Blocks until some thread's ``flush`` deposits it — submitting
-        alone does not dispatch; a flush must run somewhere.  Raises
-        ``TimeoutError`` after ``timeout`` seconds, ``KeyError`` for
-        tickets that were never issued, and re-raises the stored error of
-        requests that can never complete.  Each ticket is collectable
-        exactly once.
-        """
-        deadline = (None if timeout is None
-                    else time.perf_counter() + timeout)
-        with obs.span("result-collect", ticket=ticket):
-            with self._result_cv:
-                if not 0 <= ticket < self._next_ticket:
-                    raise KeyError(f"unknown ticket {ticket}")
-                while ticket not in self._results:
-                    remaining = (None if deadline is None
-                                 else deadline - time.perf_counter())
-                    if remaining is not None and remaining <= 0:
-                        raise TimeoutError(
-                            f"ticket {ticket} not completed within "
-                            f"{timeout}s")
-                    self._result_cv.wait(remaining)
-                res = self._results.pop(ticket)
-            obs.flow_end("request", ticket)
-        if res.error is not None:
-            raise res.error
-        return res
-
-    def serve(self, requests, timeout: float | None = 60.0
-              ) -> list[np.ndarray]:
-        """Convenience: submit an iterable of (matrix_id, x[, alpha, beta])
-        tuples, flush, and return the y's in submission order.
-
-        Collects through the completed-results store, so concurrent
-        ``serve``/``flush`` calls on other threads can interleave freely:
-        whichever thread's flush dispatches a ticket, its submitter still
-        receives it.  Re-flushes while its matrices finish background
-        encodes; raises ``TimeoutError`` if not all results arrive within
-        ``timeout`` seconds.
-        """
-        tickets = [self.submit(*r) for r in requests]
-        deadline = (None if timeout is None
-                    else time.perf_counter() + timeout)
-        out: dict[int, SpMVResult] = {}
-        waiting = list(tickets)
-        while waiting:
-            flushed = self.flush()
-            for t in list(waiting):
-                try:
-                    out[t] = self.result(t, timeout=0.05)
-                except TimeoutError:
-                    # Deferred, another thread's flush, or pruned from the
-                    # bounded store — our own flush's return still has the
-                    # latter's result.
-                    if t not in flushed:
-                        continue
-                    out[t] = flushed[t]
-                    obs.flow_end("request", t)
-                waiting.remove(t)
-            if waiting and deadline is not None \
-                    and time.perf_counter() >= deadline:
-                raise TimeoutError(
-                    f"{len(waiting)} of {len(tickets)} requests not "
-                    f"served within {timeout}s")
-        return [out[t].y for t in tickets]
-
-    def _dispatch(self, op, batch: list[SpMVRequest],
-                  results: dict[int, SpMVResult]) -> None:
-        n = len(batch)
-        width = bucket_width(n, self.max_bucket)
-        with obs.span("dispatch", matrix=batch[0].matrix_id, batch=n,
-                      bucket=width):
-            for req in batch:
-                obs.flow_step("request", req.ticket)
-            t_comp = time.perf_counter()
-            if n == 1 and width == 1:
-                # Single-request fast path: the paper's plain SpMV.
-                req = batch[0]
-                with obs.span("compute", kind="matvec"):
-                    acc = op.matvec(req.x, backend=self.backend)
-                    out = req.alpha * acc
-                    if req.beta != 0.0:
-                        out = out + req.beta * jnp.asarray(req.y,
-                                                           jnp.float32)
-                with obs.span("device-block"):
-                    ys = np.asarray(out, np.float32)[:, None]
-            else:
-                with obs.span("pack", bucket=width):
-                    x_mat = np.zeros((op.shape[1], width), np.float32)
-                    y_mat = np.zeros((op.shape[0], width), np.float32)
-                    alphas = np.zeros((width,), np.float32)
-                    betas = np.zeros((width,), np.float32)
-                    for j, req in enumerate(batch):
-                        x_mat[:, j] = req.x
-                        alphas[j] = req.alpha
-                        betas[j] = req.beta
-                        if req.y is not None:
-                            y_mat[:, j] = req.y
-                with obs.span("compute", kind="matmat"):
-                    acc = op.matmat(x_mat, backend=self.backend)  # raw A @ X
-                    out = (acc * jnp.asarray(alphas)[None, :]
-                           + jnp.asarray(y_mat) * jnp.asarray(betas)[None, :])
-                with obs.span("device-block"):
-                    ys = np.asarray(out, np.float32)
-            done = time.perf_counter()
-            bytes_per_vec = op.stream_bytes / n
-            with self._lock:
-                self._m_batches.inc()
-                self._m_vectors.add(n)
-                self._m_stream_bytes.add(op.stream_bytes)
-                self._m_batch_size.observe(n)
-                for req in batch:
-                    self._m_dispatch_lat.observe(done - req.submit_time)
-            # Auto-tuning feedback: measured slots/s for this dispatch
-            # (device-blocked, so compute_s is real wall time) flows into
-            # the tuner; every retune_every observations the registry
-            # re-consults the ranking and may swap the plan.
-            compute_s = max(done - t_comp, 1e-9)
-            mid = batch[0].matrix_id
-            if self.registry.record_observation(
-                    mid, slots_per_s=op.padded_slots / compute_s,
-                    requests_per_s=n / compute_s):
-                with self._lock:
-                    count = self._tune_obs.get(mid, 0) + 1
-                    self._tune_obs[mid] = count
-                if self.retune_every and count % self.retune_every == 0:
-                    self.registry.retune(mid)
-            for j, req in enumerate(batch):
-                results[req.ticket] = SpMVResult(
-                    ticket=req.ticket, y=ys[:, j],
-                    latency_s=done - req.submit_time,
-                    batch_size=n, bucket_n=width,
-                    stream_bytes_per_vector=bytes_per_vec,
-                    owner=req.owner)

@@ -504,6 +504,52 @@ class TestLintRules:
         diags, _ = lint_str(src)
         assert "frozen-mutation" not in rules_of(diags)
 
+    def test_unbounded_queue_true_positives(self):
+        src = ("import queue\n"
+               "from collections import deque\n"
+               "def f():\n"
+               "    a = queue.Queue()\n"
+               "    b = deque()\n"
+               "    c = deque([1, 2])\n"        # initial items, still unbounded
+               "    d = queue.SimpleQueue()\n"  # cannot be bounded at all
+               "    return a, b, c, d\n")
+        diags, _ = lint_str(src)
+        hits = [d for d in diags if d.rule == "unbounded-queue"]
+        assert {d.line for d in hits} == {4, 5, 6, 7}
+
+    def test_unbounded_queue_blocking_get(self):
+        src = ("def drain(self):\n"
+               "    item = self._inflight_queue.get()\n"
+               "    ok = self.work_q.get(timeout=0.5)\n"
+               "    nb = self.q.get(block=False)\n"
+               "    cfg = self.options.get('x')\n"   # dict-like: has an arg
+               "    return item, ok, nb, cfg\n")
+        diags, _ = lint_str(src)
+        hits = [d for d in diags if d.rule == "unbounded-queue"]
+        assert len(hits) == 1 and hits[0].line == 2
+
+    def test_unbounded_queue_negatives_and_scope(self):
+        src = ("import queue\n"
+               "from collections import deque\n"
+               "def f():\n"
+               "    a = queue.Queue(maxsize=2)\n"
+               "    b = queue.Queue(8)\n"
+               "    c = deque(maxlen=16)\n"
+               "    return a, b, c\n")
+        diags, _ = lint_str(src)
+        assert "unbounded-queue" not in rules_of(diags)
+        # Out of scope: only repro/serve/ queues must be bounded.
+        diags, _ = lint_str("from collections import deque\nd = deque()\n",
+                            path="src/repro/analysis/scratch.py")
+        assert "unbounded-queue" not in rules_of(diags)
+
+    def test_unbounded_queue_suppression(self):
+        src = ("from collections import deque\n"
+               "q = deque()  # repro-lint: disable=unbounded-queue\n")
+        diags, suppressed = lint_str(src)
+        assert suppressed == 1
+        assert "unbounded-queue" not in rules_of(diags)
+
     def test_suppression_per_line_and_all(self):
         src = ("def f(x):\n"
                "    assert x  # repro-lint: disable=bare-assert\n"

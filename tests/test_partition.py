@@ -12,7 +12,7 @@ import pytest
 from repro import compat
 from repro.core import format as F
 from repro.core import partition as PT
-from repro.core.distributed import ShardedSerpensSpMV
+from repro.core.spmv import ShardedSerpensSpMV
 from repro.core.registry import MatrixRegistry, content_key
 from repro.core.spmv import SerpensOperator, SerpensSpMV
 from repro.serve.spmv_service import SpMVService

@@ -1,0 +1,448 @@
+"""Staged serving pipeline: admission policies (block / reject /
+shed-oldest, per-owner fairness), pipelined dispatch (results without
+flush), on_ready re-entry of deferred requests, solver runs through the
+admission gate, and the interleaved multi-owner stress test."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import format as F
+from repro.core import registry as R
+from repro.serve.pipeline import (AdmissionConfig, AdmissionRejected,
+                                  RequestShed, SpMVPipeline)
+from repro.serve.spmv_service import SpMVService
+
+CFG = F.SerpensConfig(segment_width=64, lanes=8, sublanes=4, raw_window=4)
+
+
+def coo(m, k, nnz, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, m, nnz), rng.integers(0, k, nnz),
+            rng.normal(size=nnz).astype(np.float32))
+
+
+def dense_of(rows, cols, vals, shape):
+    out = np.zeros(shape, np.float32)
+    np.add.at(out, (rows, cols), vals)
+    return out
+
+
+def make(n=64, nnz=500, seed=0, **kw):
+    rows, cols, vals = coo(n, n, nnz, seed=seed)
+    reg = R.MatrixRegistry(config=CFG, backend="xla")
+    mid = reg.put(rows, cols, vals, (n, n))
+    svc = SpMVPipeline(reg, backend="xla", **kw)
+    return svc, reg, mid, n, dense_of(rows, cols, vals, (n, n))
+
+
+@pytest.fixture
+def gated(monkeypatch):
+    """Gate every encode on an event (see tests/test_background.py)."""
+    gate = threading.Event()
+    orig = R.penc.prepare_and_plan
+
+    def waiting(*args, **kwargs):
+        assert gate.wait(30), "test forgot to release the encode gate"
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(R.penc, "prepare_and_plan", waiting)
+    yield gate.set
+    gate.set()
+
+
+class TestAdmissionConfig:
+    def test_policy_validated(self):
+        with pytest.raises(ValueError, match="policy"):
+            AdmissionConfig(policy="drop-newest")
+        with pytest.raises(ValueError, match="max_pending"):
+            AdmissionConfig(max_pending=0)
+        with pytest.raises(ValueError, match="per_owner_cap"):
+            AdmissionConfig(per_owner_cap=0)
+        with pytest.raises(ValueError, match="block_timeout"):
+            AdmissionConfig(block_timeout=0.0)
+
+    def test_string_shorthand(self):
+        svc, *_ = make(admission="reject")
+        assert svc.admission.policy == "reject"
+        with pytest.raises(ValueError):
+            make(admission="bogus")
+
+
+class TestRejectPolicy:
+    def test_reject_raises_at_capacity(self):
+        svc, reg, mid, n, _ = make(
+            admission=AdmissionConfig("reject", max_pending=2))
+        x = np.ones(n, np.float32)
+        svc.submit(mid, x)
+        svc.submit(mid, x)
+        with pytest.raises(AdmissionRejected, match="queue"):
+            svc.submit(mid, x)
+        assert svc.stats.admitted == 2
+        assert svc.stats.rejected == 1
+        svc.flush()              # drains: the gate opens again
+        svc.submit(mid, x)
+        assert svc.stats.admitted == 3
+
+    def test_per_owner_cap_is_per_owner(self):
+        svc, reg, mid, n, _ = make(admission=AdmissionConfig(
+            "reject", max_pending=16, per_owner_cap=1))
+        x = np.ones(n, np.float32)
+        svc.submit(mid, x, owner="a")
+        with pytest.raises(AdmissionRejected, match="owner"):
+            svc.submit(mid, x, owner="a")
+        svc.submit(mid, x, owner="b")     # other owners unaffected
+        assert svc.stats.admitted == 2 and svc.stats.rejected == 1
+
+
+class TestShedOldestPolicy:
+    def test_sheds_exactly_the_oldest(self):
+        svc, reg, mid, n, dense = make(
+            admission=AdmissionConfig("shed-oldest", max_pending=3))
+        x = np.ones(n, np.float32)
+        tickets = [svc.submit(mid, x) for _ in range(10)]
+        assert tickets == list(range(10))
+        assert svc.pending == 3
+        assert svc.stats.shed == 7
+        # FIFO eviction: exactly the 7 oldest tickets were shed, and each
+        # shed ticket surfaces as a RequestShed error to its caller.
+        for t in tickets[:7]:
+            with pytest.raises(RequestShed):
+                svc.result(t, timeout=1.0)
+        svc.flush()
+        for t in tickets[7:]:
+            res = svc.result(t, timeout=1.0)
+            np.testing.assert_allclose(res.y, dense @ x, rtol=1e-4,
+                                       atol=1e-4)
+
+    def test_owner_scoped_shed(self):
+        # Only the per-owner cap trips: the victim is that owner's oldest,
+        # never another caller's request.
+        svc, reg, mid, n, _ = make(admission=AdmissionConfig(
+            "shed-oldest", max_pending=16, per_owner_cap=1))
+        x = np.ones(n, np.float32)
+        t_b = svc.submit(mid, x, owner="b")
+        t_a1 = svc.submit(mid, x, owner="a")
+        t_a2 = svc.submit(mid, x, owner="a")   # sheds a's oldest, not b's
+        with pytest.raises(RequestShed):
+            svc.result(t_a1, timeout=1.0)
+        svc.flush()
+        assert svc.result(t_b, timeout=1.0).owner == "b"
+        assert svc.result(t_a2, timeout=1.0).owner == "a"
+        assert svc.results_dropped_by_owner() == {}   # shed != dropped
+        assert svc.stats.shed == 1
+
+
+class TestBlockPolicy:
+    def test_block_times_out(self):
+        svc, reg, mid, n, _ = make(admission=AdmissionConfig(
+            "block", max_pending=1, block_timeout=0.3))
+        x = np.ones(n, np.float32)
+        svc.submit(mid, x)
+        t0 = time.perf_counter()
+        with pytest.raises(AdmissionRejected, match="block_timeout"):
+            svc.submit(mid, x)
+        assert time.perf_counter() - t0 >= 0.25
+        assert svc.snapshot()["admission"]["block_waits"] == 1
+
+    def test_block_unblocks_when_drained(self):
+        svc, reg, mid, n, dense = make(admission=AdmissionConfig(
+            "block", max_pending=1, block_timeout=10.0))
+        x = np.ones(n, np.float32)
+        svc.submit(mid, x)
+
+        flusher = threading.Timer(0.2, svc.flush)
+        flusher.start()
+        try:
+            t0 = time.perf_counter()
+            t2 = svc.submit(mid, x)     # blocks until the flush drains
+            waited = time.perf_counter() - t0
+        finally:
+            flusher.join()
+        assert waited >= 0.1            # it really did backpressure
+        svc.flush()
+        np.testing.assert_allclose(svc.result(t2, timeout=1.0).y,
+                                   dense @ x, rtol=1e-4, atol=1e-4)
+
+
+class TestPipelinedMode:
+    def test_results_without_flush(self):
+        svc, reg, mid, n, dense = make(max_bucket=4)
+        rng = np.random.default_rng(3)
+        xs = [rng.normal(size=n).astype(np.float32) for _ in range(12)]
+        with svc:
+            assert svc.pipelined
+            tickets = [svc.submit(mid, x) for x in xs]
+            for t, x in zip(tickets, xs):
+                res = svc.result(t, timeout=30.0)
+                np.testing.assert_allclose(res.y, dense @ x, rtol=1e-4,
+                                           atol=1e-4)
+        assert not svc.pipelined
+        st = svc.stats
+        assert st.vectors == 12 and st.batches >= 3    # max_bucket=4
+
+    def test_flush_is_a_drain_barrier(self):
+        svc, reg, mid, n, _ = make()
+        x = np.ones(n, np.float32)
+        with svc:
+            tickets = [svc.submit(mid, x) for _ in range(5)]
+            assert svc.flush() == {}        # pipelined: drain, no dict
+            # After the barrier every ticket is already deposited.
+            for t in tickets:
+                svc.result(t, timeout=0.5)
+
+    def test_snapshot_reports_pipeline_state(self):
+        svc, reg, mid, n, _ = make(inflight_depth=3)
+        snap = svc.snapshot()
+        assert snap["pipelined"] is False
+        with svc:
+            snap = svc.snapshot()
+            assert snap["pipelined"] is True
+            assert snap["queue_depth"] == 0
+            assert snap["admission"]["policy"] == "block"
+        assert svc.snapshot()["pipelined"] is False
+
+    def test_start_is_idempotent_and_restartable(self):
+        svc, reg, mid, n, _ = make()
+        x = np.ones(n, np.float32)
+        svc.start()
+        svc.start()
+        t = svc.submit(mid, x)
+        assert svc.result(t, timeout=30.0).y is not None
+        svc.stop()
+        svc.start()                       # a stopped pipeline restarts
+        t = svc.submit(mid, x)
+        assert svc.result(t, timeout=30.0).y is not None
+        svc.stop()
+
+    def test_deferred_request_reenters_without_flush(self, gated):
+        """The on_ready listener re-parks the request into the pipeline:
+        results arrive with no flush() call anywhere."""
+        release = gated
+        reg = R.MatrixRegistry(config=CFG, backend="xla")
+        r, c, v = coo(48, 48, 300, seed=5)
+        svc = SpMVPipeline(reg, backend="xla")
+        with svc:
+            mid = reg.put(r, c, v, (48, 48), blocking=False)
+            x = np.ones(48, np.float32)
+            tickets = [svc.submit(mid, x) for _ in range(3)]
+            assert svc.stats.deferred == 3   # counted at the gate
+            release()
+            for t in tickets:
+                res = svc.result(t, timeout=30.0)
+                np.testing.assert_allclose(
+                    res.y, dense_of(r, c, v, (48, 48)) @ x,
+                    rtol=1e-4, atol=1e-4)
+
+    def test_evicted_mid_encode_fails_ticket_in_pipeline(self, gated):
+        release = gated
+        reg = R.MatrixRegistry(config=CFG, backend="xla")
+        r, c, v = coo(32, 32, 200, seed=6)
+        svc = SpMVPipeline(reg, backend="xla")
+        with svc:
+            mid = reg.put(r, c, v, (32, 32), blocking=False)
+            t = svc.submit(mid, np.ones(32, np.float32))
+            reg.evict(mid)
+            release()
+            with pytest.raises(KeyError):
+                svc.result(t, timeout=30.0)
+
+
+class TestSolveThroughGate:
+    def test_submit_solve_validation(self):
+        svc, reg, mid, n, _ = make()
+        with pytest.raises(ValueError, match="unknown solver"):
+            svc.submit_solve(mid, "gauss")
+        with pytest.raises(ValueError, match="requires b"):
+            svc.submit_solve(mid, "cg")
+        with pytest.raises(ValueError, match="takes no b"):
+            svc.submit_solve(mid, "pagerank", b=np.ones(n, np.float32))
+
+    def test_pagerank_solve_sync(self):
+        from repro.data import matrices as M
+        from repro.solvers import pagerank
+        n = 120
+        rows, cols, vals = M.power_law_graph(n, 900, seed=7)
+        vals_n = M.column_normalize(rows, cols, vals, n)
+        reg = R.MatrixRegistry(config=CFG, backend="xla")
+        mid = reg.put(rows, cols, vals_n, (n, n))
+        svc = SpMVPipeline(reg, backend="xla")
+        res = svc.solve(mid, "pagerank", tol=1e-5, owner="ranker")
+        assert res.solve is not None and res.solve.converged
+        assert res.owner == "ranker"
+        ref = pagerank(reg.get(mid), tol=1e-5)
+        np.testing.assert_allclose(res.y, np.asarray(ref.x),
+                                   rtol=1e-4, atol=1e-5)
+        # A solve charges one A-stream pass per iteration.
+        assert svc.stats.stream_bytes == \
+            reg.get(mid).stream_bytes * res.solve.iterations
+        assert svc.stats.batches == 1 and svc.stats.vectors == 1
+
+    def test_cg_solve_pipelined(self):
+        # SPD system: diagonally dominant symmetric matrix.
+        n = 32
+        rng = np.random.default_rng(11)
+        a = rng.normal(size=(n, n)).astype(np.float32) * 0.05
+        a = a + a.T + np.eye(n, dtype=np.float32) * n
+        rr, cc = np.nonzero(a)
+        reg = R.MatrixRegistry(config=CFG, backend="xla")
+        mid = reg.put(rr, cc, a[rr, cc], (n, n))
+        svc = SpMVPipeline(reg, backend="xla")
+        b = rng.normal(size=n).astype(np.float32)
+        with svc:
+            t = svc.submit_solve(mid, "cg", b=b, tol=1e-6)
+            res = svc.result(t, timeout=60.0)
+        assert res.solve.converged
+        np.testing.assert_allclose(a @ res.y, b, rtol=1e-3, atol=1e-3)
+
+    def test_solver_failure_becomes_error_result(self):
+        svc, reg, mid, n, _ = make()
+        t = svc.submit_solve(mid, "cg", b=np.ones(n, np.float32),
+                             no_such_kw=1)   # solver raises TypeError
+        svc.flush()
+        with pytest.raises(TypeError):
+            svc.result(t, timeout=1.0)
+        assert svc.stats.batches == 0        # failed solve never counted
+
+    def test_solves_and_spmv_share_the_gate(self):
+        svc, reg, mid, n, _ = make(
+            admission=AdmissionConfig("reject", max_pending=2))
+        svc.submit(mid, np.ones(n, np.float32))
+        svc.submit_solve(mid, "pagerank")
+        with pytest.raises(AdmissionRejected):
+            svc.submit_solve(mid, "pagerank")
+        results = svc.flush()
+        assert len(results) == 2
+
+
+POLICIES = ("block", "reject", "shed-oldest")
+
+
+class TestInterleavedStress:
+    """Satellite acceptance: ≥3 owners interleaving submit / update /
+    flush / evict(+re-put) under every admission policy — no torn
+    snapshots, no lost tickets, shed only under shed-oldest."""
+
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_no_lost_tickets_no_torn_snapshots(self, policy):
+        n, nnz = 48, 400
+        rows, cols, vals = coo(n, n, nnz, seed=13)
+        reg = R.MatrixRegistry(config=CFG, backend="xla")
+        mid = reg.put(rows, cols, vals, (n, n))
+        svc = SpMVService(reg, backend="xla", max_bucket=8,
+                          admission=AdmissionConfig(
+                              policy, max_pending=8, per_owner_cap=4,
+                              block_timeout=0.2))
+        stop = threading.Event()
+        errors = []
+        tickets_by_owner = {f"owner-{i}": [] for i in range(3)}
+        rejected = {"n": 0}
+        reject_lock = threading.Lock()
+
+        def submitter(owner):
+            x = np.ones(n, np.float32)
+            while not stop.is_set():
+                try:
+                    t = svc.submit(mid, x, owner=owner)
+                    tickets_by_owner[owner].append(t)
+                except AdmissionRejected:
+                    with reject_lock:
+                        rejected["n"] += 1
+                except KeyError:
+                    pass                    # evictor raced us; re-put soon
+                except Exception as e:      # pragma: no cover
+                    errors.append(e)
+                    return
+                if len(tickets_by_owner[owner]) % 4 == 0:
+                    try:
+                        svc.flush()
+                    except KeyError:
+                        pass                # deferred op evicted mid-flush
+                    except Exception as e:  # pragma: no cover
+                        errors.append(e)
+                        return
+
+        def updater():
+            rng = np.random.default_rng(17)
+            while not stop.is_set():
+                r = rng.integers(0, n, 4)
+                c = rng.integers(0, n, 4)
+                try:
+                    svc.update(mid, r, c, np.ones(4, np.float32))
+                except KeyError:
+                    pass                    # evicted under us
+                except Exception as e:      # pragma: no cover
+                    errors.append(e)
+                    return
+                time.sleep(0.002)
+
+        def evictor():
+            while not stop.is_set():
+                time.sleep(0.01)
+                try:
+                    reg.evict(mid)
+                    reg.put(rows, cols, vals, (n, n), matrix_id=mid)
+                except Exception as e:      # pragma: no cover
+                    errors.append(e)
+                    return
+
+        threads = [threading.Thread(target=submitter,
+                                    args=(f"owner-{i}",), name=f"owner-{i}")
+                   for i in range(3)]
+        threads += [threading.Thread(target=updater),
+                    threading.Thread(target=evictor)]
+        for t in threads:
+            t.start()
+        try:
+            for _ in range(40):             # concurrent snapshot reader
+                ss = svc.stats_snapshot()
+                assert ss.batches >= 0 and ss.vectors >= 0
+                assert ss.vectors <= ss.batches * svc.max_bucket
+                assert ss.admitted >= 0 and ss.shed >= 0
+                snap = svc.snapshot()
+                assert snap["queue_depth"] >= 0
+                assert snap["admission"]["policy"] == policy
+                time.sleep(0.005)
+        finally:
+            stop.set()
+            for t in threads:
+                t.join()
+        assert not errors, errors
+
+        # Drain everything left in the queue.
+        deadline = time.perf_counter() + 30
+        while svc.pending:
+            assert time.perf_counter() < deadline, "queue failed to drain"
+            try:
+                svc.flush()
+            except KeyError:
+                time.sleep(0.01)            # mid-re-put; retry
+
+        # Every issued ticket resolves: a result, a stored error
+        # (RequestShed / evicted-mid-encode), never a timeout (= a torn
+        # ticket lost inside the pipeline).
+        shed_seen = 0
+        for owner, tickets in tickets_by_owner.items():
+            assert tickets == sorted(tickets)   # monotonic per owner
+            for t in tickets:
+                try:
+                    res = svc.result(t, timeout=5.0)
+                    assert res.owner == owner
+                    assert res.y is not None
+                except RequestShed:
+                    shed_seen += 1
+                except TimeoutError:        # pragma: no cover
+                    pytest.fail(f"ticket {t} ({owner}) lost in pipeline")
+                except (KeyError, RuntimeError):
+                    pass                    # failed explicitly: accounted
+        st = svc.stats
+        if policy == "shed-oldest":
+            assert shed_seen == st.shed
+            assert st.rejected == rejected["n"]
+        else:
+            assert st.shed == shed_seen == 0
+        if policy == "reject":
+            assert st.rejected == rejected["n"]
+        n_issued = sum(len(v) for v in tickets_by_owner.values())
+        assert st.admitted == n_issued
